@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks: oracle (jnp, jit'd on CPU) timings + interpret-
+mode correctness spot-check.  On-TPU numbers come from the same ops with
+backend='pallas'."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hop_eval import hop_cost
+from repro.kernels.lif_step import lif_step
+from repro.kernels.link_load import link_loads
+from repro.kernels.swap_delta import swap_deltas
+
+from .common import emit
+
+
+def _time(fn, *args, iters=20, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(full: bool = False) -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    k, w = 256, 16
+    c = jnp.asarray(rng.integers(0, 100, (k, k)), jnp.float32)
+    sym = c + c.T
+    x = jnp.asarray(rng.integers(0, w, k), jnp.float32)
+    y = jnp.asarray(rng.integers(0, w, k), jnp.float32)
+
+    us = _time(hop_cost, c, x, y, backend="jnp")
+    ok = abs(float(hop_cost(c, x, y, backend="interpret"))
+             - float(hop_cost(c, x, y, backend="jnp"))) < 1.0
+    rows.append({"name": "kernel/hop_eval_k256", "us_per_call": round(us, 1),
+                 "derived": f"interpret_matches_oracle={ok};flops={2*k*k}"})
+
+    us = _time(swap_deltas, sym, x, y, backend="jnp")
+    d_i = np.asarray(swap_deltas(sym, x, y, backend="interpret"))
+    d_o = np.asarray(swap_deltas(sym, x, y, backend="jnp"))
+    ok = np.allclose(d_i, d_o, rtol=1e-4, atol=1e-2)
+    rows.append({"name": "kernel/swap_delta_k256", "us_per_call": round(us, 1),
+                 "derived": f"interpret_matches_oracle={ok};flops={4*k**3}"})
+
+    n = 8192
+    v = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    refr = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
+    cur = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    kw = dict(decay=0.9, threshold=1.0, v_reset=0.0, refractory=2)
+    us = _time(lif_step, v, refr, cur, backend="jnp", **kw)
+    a = lif_step(v, refr, cur, backend="interpret", **kw)
+    b = lif_step(v, refr, cur, backend="jnp", **kw)
+    ok = np.allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=1e-5, atol=1e-6)
+    rows.append({"name": "kernel/lif_step_n8192", "us_per_call": round(us, 1),
+                 "derived": f"interpret_matches_oracle={ok}"})
+
+    us = _time(link_loads, c, x, y, w, w, backend="jnp")
+    pa = link_loads(c, x, y, w, w, backend="interpret")
+    pb = link_loads(c, x, y, w, w, backend="jnp")
+    ok = all(np.allclose(np.asarray(i), np.asarray(j), rtol=1e-4)
+             for i, j in zip(pa, pb))
+    rows.append({"name": "kernel/link_load_k256_16x16", "us_per_call": round(us, 1),
+                 "derived": f"interpret_matches_oracle={ok}"})
+    emit(rows, "kernel microbenchmarks (CPU oracle timings)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -1,0 +1,45 @@
+"""Paper Fig. 7: overall toolchain results — average latency, dynamic
+energy, edge variance, congestion count for SNEAP / SpiNeMap / SCO,
+normalized to SpiNeMap."""
+from __future__ import annotations
+
+from repro.core import run_toolchain
+
+from .common import emit, get_profile, scale
+
+
+def run(full: bool = False) -> list[dict]:
+    s = scale(full)
+    rows = []
+    for snn in s["snns"]:
+        prof = get_profile(snn, full)
+        mesh_w = 5 if prof.num_neurons <= 25 * 256 else 8
+        mode = "queued" if prof.num_spikes < 6_000_000 else "analytic"
+        results = {}
+        for method in ("sneap", "spinemap", "sco"):
+            budget = {"sneap": {"iters": s["sa_iters"]},
+                      "spinemap": {"iters": s["pso_iters"]},
+                      "sco": {}}[method]
+            results[method] = run_toolchain(
+                prof, method=method, mesh_w=mesh_w, mesh_h=mesh_w, seed=0,
+                noc_mode=mode, mapper_kwargs=budget)
+        ref = results["spinemap"].noc
+        for method, r in results.items():
+            rows.append({
+                "name": f"overall/{snn}/{method}",
+                "us_per_call": round(r.total_seconds * 1e6, 1),
+                "derived": (
+                    f"latency={r.noc.avg_latency:.3f};"
+                    f"latency_vs_spinemap={r.noc.avg_latency / max(ref.avg_latency, 1e-9):.3f};"
+                    f"energy_vs_spinemap={r.noc.dynamic_energy_pj / max(ref.dynamic_energy_pj, 1e-9):.3f};"
+                    f"edgevar_vs_spinemap={r.noc.edge_variance / max(ref.edge_variance, 1e-9):.3f};"
+                    f"congestion_vs_spinemap={r.noc.congestion_count / max(ref.congestion_count, 1):.3f};"
+                    f"cut={r.partition.edge_cut};avg_hop={r.mapping.avg_hop:.4f}"
+                ),
+            })
+    emit(rows, "Fig7: overall toolchain metrics (normalized to SpiNeMap)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

@@ -1,0 +1,33 @@
+"""Paper Fig. 4: partitioning-phase global traffic + execution time,
+SNEAP (multilevel) vs SpiNeMap (greedy KL), normalized to SpiNeMap."""
+from __future__ import annotations
+
+from repro.core import greedy_kl_partition, sneap_partition
+
+from .common import emit, get_profile, scale
+
+
+def run(full: bool = False) -> list[dict]:
+    rows = []
+    for snn in scale(full)["snns"]:
+        prof = get_profile(snn, full)
+        mesh_cores = 25 if prof.num_neurons <= 25 * 256 else 64
+        sneap = sneap_partition(prof.graph, capacity=256, seed=0)
+        spine = greedy_kl_partition(prof.graph, capacity=256, seed=0)
+        rows.append({
+            "name": f"partition/{snn}",
+            "us_per_call": round(sneap.seconds * 1e6, 1),
+            "derived": (
+                f"cut_sneap={sneap.edge_cut};cut_spinemap={spine.edge_cut};"
+                f"traffic_ratio={sneap.edge_cut / max(spine.edge_cut, 1):.3f};"
+                f"time_sneap_s={sneap.seconds:.3f};time_spinemap_s={spine.seconds:.3f};"
+                f"speedup={spine.seconds / max(sneap.seconds, 1e-9):.1f}x;"
+                f"spikes={prof.num_spikes};k={sneap.k}"
+            ),
+        })
+    emit(rows, "Fig4: partitioning traffic + time (SNEAP vs greedy-KL)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(full=True)

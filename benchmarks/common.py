@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: profile cache, CSV emission, scale control."""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+from pathlib import Path
+
+from repro.snn import PAPER_SNNS, make_snn, profile_snn
+
+CACHE_DIR = Path("results/profile_cache")
+
+# quick mode: short profiling window + small mapper budgets (CI-friendly);
+# full mode: Table 1 spike counts + paper-scale budgets.
+QUICK = {"num_steps": 250, "sa_iters": 6000, "pso_iters": 40, "tabu_iters": 60,
+         "snns": ["smooth_320", "smooth_1280"]}
+FULL = {"num_steps": 1200, "sa_iters": 40_000, "pso_iters": 150,
+        "tabu_iters": 200, "snns": PAPER_SNNS}
+
+
+def scale(full: bool) -> dict:
+    return FULL if full else QUICK
+
+
+def get_profile(name: str, full: bool):
+    s = scale(full)
+    return profile_snn(make_snn(name), num_steps=s["num_steps"], seed=0,
+                       cache_dir=CACHE_DIR)
+
+
+def emit(rows: list[dict], header: str = "") -> None:
+    """Print rows as CSV to stdout (the benchmark contract)."""
+    if not rows:
+        return
+    if header:
+        print(f"# {header}")
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=list(rows[0].keys()))
+    w.writeheader()
+    w.writerows(rows)
+    sys.stdout.write(buf.getvalue())

@@ -1,0 +1,79 @@
+"""Input-shape registry: the 4 assigned shapes and per-(arch, shape)
+ShapeDtypeStruct input specs for the dry-run (no allocation).
+
+  train_4k    seq=4096   global_batch=256  -> train_step
+  prefill_32k seq=32768  global_batch=32   -> prefill_step
+  decode_32k  seq=32768  global_batch=128  -> serve_step (1 token, KV=seq)
+  long_500k   seq=524288 global_batch=1    -> serve_step; sub-quadratic only
+
+`applicable()` encodes the skip rules (long_500k only for SSM/hybrid; see
+DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import DTYPES
+
+__all__ = ["SHAPES", "ShapeSpec", "applicable", "input_specs", "cache_specs"]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        return False, ("full quadratic attention: 512k decode KV cache is "
+                       "intentionally out of scope (sub-quadratic archs only)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    sp = SHAPES[shape_name]
+    b, s = sp.global_batch, sp.seq_len
+    adt = DTYPES[cfg.activation_dtype]
+    specs: dict = {}
+    if sp.kind == "train":
+        specs["tokens"] = _sds((b, s), jnp.int32)
+        specs["labels"] = _sds((b, s), jnp.int32)
+    elif sp.kind == "prefill":
+        specs["tokens"] = _sds((b, s), jnp.int32)
+    else:  # decode: one new token against a cache of length s
+        specs["tokens"] = _sds((b, 1), jnp.int32)
+        specs["positions"] = _sds((b, 1), jnp.int32)
+    if cfg.family in ("vlm", "audio") and sp.kind != "decode":
+        specs["frontend"] = _sds((b, cfg.frontend_seq, cfg.frontend_dim), adt)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """ShapeDtypeStructs for the decode-cache pytree (serve_step input)."""
+    from repro.models.model import Model
+
+    sp = SHAPES[shape_name]
+    caches = jax.eval_shape(
+        lambda: Model(cfg).init_caches(sp.global_batch, sp.seq_len))
+    return caches

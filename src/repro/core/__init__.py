@@ -1,0 +1,22 @@
+"""SNEAP core: the paper's contribution.
+
+Partitioning (multilevel graph partitioning minimizing inter-partition
+spikes), mapping (SA/PSO/Tabu placement minimizing average hop under XY
+routing), analytic hop evaluation (Algorithm 1), baselines (SpiNeMap,
+SCO), and the end-to-end toolchain pipeline.
+"""
+from .baselines import greedy_kl_partition, sco_partition, sco_place
+from .graph import Graph, build_graph, edge_cut, partition_weights, validate_partition
+from .hopcost import average_hop, core_coords, hop_distance_matrix, swap_delta, traffic_matrix
+from .mapping import MAPPERS, MappingResult, pso_search, sa_search, tabu_search
+from .partition import PartitionResult, sneap_partition
+from .pipeline import ToolchainResult, run_toolchain
+
+__all__ = [
+    "Graph", "build_graph", "edge_cut", "partition_weights", "validate_partition",
+    "average_hop", "core_coords", "hop_distance_matrix", "swap_delta", "traffic_matrix",
+    "MAPPERS", "MappingResult", "pso_search", "sa_search", "tabu_search",
+    "PartitionResult", "sneap_partition",
+    "greedy_kl_partition", "sco_partition", "sco_place",
+    "ToolchainResult", "run_toolchain",
+]

@@ -1,0 +1,117 @@
+"""Coarsening step of the multilevel partitioning paradigm (paper §3.3).
+
+Heavy-edge matching: vertices are visited in random order; an unmatched
+vertex m is folded with the unmatched neighbor n maximizing the weight of
+edge (m, n).  Matched pairs become single vertices of the next-coarser
+graph; parallel edges merge by summing weights.  Coarsening repeats level
+by level until the graph is small or stops shrinking.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import Graph
+
+__all__ = ["heavy_edge_matching", "contract", "coarsen"]
+
+
+def heavy_edge_matching(graph: Graph, rng: np.random.Generator) -> np.ndarray:
+    """Return match[v] = partner vertex (or v itself if unmatched)."""
+    n = graph.num_vertices
+    match = np.full(n, -1, dtype=np.int64)
+    order = rng.permutation(n)
+    xadj, adjncy, adjwgt = graph.xadj, graph.adjncy, graph.adjwgt
+    for v in order:
+        if match[v] != -1:
+            continue
+        s, e = xadj[v], xadj[v + 1]
+        nbrs = adjncy[s:e]
+        wgts = adjwgt[s:e]
+        free = match[nbrs] == -1
+        if free.any():
+            cand_n = nbrs[free]
+            cand_w = wgts[free]
+            u = int(cand_n[np.argmax(cand_w)])
+            match[v] = u
+            match[u] = v
+        else:
+            match[v] = v
+    return match
+
+
+def contract(graph: Graph, match: np.ndarray) -> Graph:
+    """Contract matched pairs into the next-coarser graph.
+
+    Returns a Graph whose ``cmap`` maps fine vertices -> coarse vertices.
+    """
+    n = graph.num_vertices
+    # Assign coarse ids: the lower-numbered endpoint of each pair owns the id.
+    rep = np.minimum(np.arange(n), match)
+    uniq, cmap = np.unique(rep, return_inverse=True)
+    nc = uniq.shape[0]
+
+    cvwgt = np.zeros(nc, dtype=np.int64)
+    np.add.at(cvwgt, cmap, graph.vwgt)
+
+    src = np.repeat(np.arange(n), np.diff(graph.xadj))
+    csrc = cmap[src]
+    cdst = cmap[graph.adjncy]
+    keep = csrc != cdst  # internal (matched) edges disappear
+    csrc, cdst, cw = csrc[keep], cdst[keep], graph.adjwgt[keep]
+
+    # Merge parallel edges (both directions are present symmetrically).
+    key = csrc.astype(np.int64) * nc + cdst
+    order = np.argsort(key, kind="stable")
+    key, csrc, cdst, cw = key[order], csrc[order], cdst[order], cw[order]
+    uniq_key, start = np.unique(key, return_index=True)
+    merged_w = np.add.reduceat(cw, start) if len(key) else cw
+    msrc = (uniq_key // nc).astype(np.int64)
+    mdst = (uniq_key % nc).astype(np.int64)
+
+    xadj = np.zeros(nc + 1, dtype=np.int64)
+    np.add.at(xadj, msrc + 1, 1)
+    xadj = np.cumsum(xadj)
+    return Graph(
+        xadj=xadj,
+        adjncy=mdst.astype(np.int32),
+        adjwgt=merged_w.astype(np.int64),
+        vwgt=cvwgt,
+        cmap=cmap,
+    )
+
+
+def coarsen(
+    graph: Graph,
+    rng: np.random.Generator,
+    coarsen_to: int = 128,
+    max_vwgt: int | None = None,
+    shrink_floor: float = 0.95,
+    max_levels: int = 40,
+) -> list[Graph]:
+    """Coarsen level by level; returns [G_0, G_1, ..., G_c] (fine -> coarse).
+
+    Stops when the graph has <= ``coarsen_to`` vertices, stops shrinking
+    (|G_{i+1}| > shrink_floor * |G_i|), or ``max_levels`` is hit.
+    ``max_vwgt`` bounds the merged vertex weight so that coarse vertices
+    stay placeable within a core's neuron capacity.
+    """
+    levels = [graph]
+    for _ in range(max_levels):
+        g = levels[-1]
+        if g.num_vertices <= coarsen_to or g.num_edges == 0:
+            break
+        match = heavy_edge_matching(g, rng)
+        if max_vwgt is not None:
+            # Undo matches whose merged weight would exceed the cap.
+            v = np.arange(g.num_vertices)
+            over = (g.vwgt + g.vwgt[match]) > max_vwgt
+            bad = over & (match != v)
+            match = match.copy()
+            match[bad] = v[bad]
+            partner_bad = bad[match]
+            match[partner_bad] = v[partner_bad]
+        coarse = contract(g, match)
+        if coarse.num_vertices > shrink_floor * g.num_vertices:
+            break
+        levels.append(coarse)
+    return levels

@@ -1,0 +1,137 @@
+"""Spike-weighted SNN graphs in CSR form.
+
+The profiling phase (``repro.snn.simulate``) produces an undirected graph
+G(N, S): vertices are neurons, an edge (i, j) carries the number of spikes
+communicated on the synapse between i and j during the profiled window
+(paper §3.2).  All partitioning machinery operates on this CSR structure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["Graph", "build_graph", "edge_cut", "partition_weights", "validate_partition"]
+
+
+@dataclass
+class Graph:
+    """Undirected weighted graph in CSR (symmetric adjacency, both directions stored).
+
+    Attributes:
+      xadj:   (n+1,) int64 — CSR row offsets.
+      adjncy: (m,)   int32 — neighbor indices (each undirected edge appears twice).
+      adjwgt: (m,)   int64 — edge weights (spike counts).
+      vwgt:   (n,)   int64 — vertex weights (neuron multiplicity; 1 at level 0).
+    """
+
+    xadj: np.ndarray
+    adjncy: np.ndarray
+    adjwgt: np.ndarray
+    vwgt: np.ndarray
+    # Maps each vertex of this (coarse) graph back to vertices of the parent
+    # finer graph; None at level 0.
+    cmap: np.ndarray | None = field(default=None, repr=False)
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.vwgt.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        """Number of undirected edges."""
+        return int(self.adjncy.shape[0] // 2)
+
+    @property
+    def total_vwgt(self) -> int:
+        return int(self.vwgt.sum())
+
+    @property
+    def total_adjwgt(self) -> int:
+        """Sum of edge weights (each undirected edge counted once)."""
+        return int(self.adjwgt.sum() // 2)
+
+    def degree(self, v: int) -> int:
+        return int(self.xadj[v + 1] - self.xadj[v])
+
+    def neighbors(self, v: int) -> tuple[np.ndarray, np.ndarray]:
+        s, e = self.xadj[v], self.xadj[v + 1]
+        return self.adjncy[s:e], self.adjwgt[s:e]
+
+
+def build_graph(
+    num_vertices: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    weight: np.ndarray,
+    vwgt: np.ndarray | None = None,
+) -> Graph:
+    """Build a symmetric CSR graph from weighted (src, dst, weight) edge triples.
+
+    Duplicate (src, dst) pairs are merged by summing weights; self-loops are
+    dropped (a neuron's spike to itself never crosses the NoC).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    weight = np.asarray(weight, dtype=np.int64)
+    keep = src != dst
+    src, dst, weight = src[keep], dst[keep], weight[keep]
+
+    # Canonicalize each undirected edge to (min, max) and merge duplicates.
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    key = lo * num_vertices + hi
+    order = np.argsort(key, kind="stable")
+    key, lo, hi, weight = key[order], lo[order], hi[order], weight[order]
+    uniq, start = np.unique(key, return_index=True)
+    merged_w = np.add.reduceat(weight, start) if len(key) else weight
+    lo, hi = lo[start], hi[start]
+
+    # Expand to both directions and sort by source for CSR.
+    all_src = np.concatenate([lo, hi])
+    all_dst = np.concatenate([hi, lo])
+    all_w = np.concatenate([merged_w, merged_w])
+    order = np.argsort(all_src, kind="stable")
+    all_src, all_dst, all_w = all_src[order], all_dst[order], all_w[order]
+
+    xadj = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.add.at(xadj, all_src + 1, 1)
+    xadj = np.cumsum(xadj)
+    if vwgt is None:
+        vwgt = np.ones(num_vertices, dtype=np.int64)
+    return Graph(
+        xadj=xadj,
+        adjncy=all_dst.astype(np.int32),
+        adjwgt=all_w.astype(np.int64),
+        vwgt=np.asarray(vwgt, dtype=np.int64),
+    )
+
+
+def edge_cut(graph: Graph, part: np.ndarray) -> int:
+    """Sum of weights of edges whose endpoints lie in different partitions.
+
+    This is the partitioning objective: the number of spikes communicated
+    *between* partitions (paper §3.3, "global traffic").
+    """
+    src = np.repeat(np.arange(graph.num_vertices), np.diff(graph.xadj))
+    cut_mask = part[src] != part[graph.adjncy]
+    return int(graph.adjwgt[cut_mask].sum() // 2)
+
+
+def partition_weights(graph: Graph, part: np.ndarray, k: int) -> np.ndarray:
+    """(k,) vertex weight (neuron count) per partition."""
+    w = np.zeros(k, dtype=np.int64)
+    np.add.at(w, part, graph.vwgt)
+    return w
+
+
+def validate_partition(graph: Graph, part: np.ndarray, k: int, capacity: int) -> None:
+    """Raise if `part` is not a valid k-way partition within core capacity."""
+    if part.shape != (graph.num_vertices,):
+        raise ValueError(f"partition vector shape {part.shape} != ({graph.num_vertices},)")
+    if part.min() < 0 or part.max() >= k:
+        raise ValueError(f"partition ids outside [0, {k})")
+    w = partition_weights(graph, part, k)
+    if (w > capacity).any():
+        bad = np.nonzero(w > capacity)[0]
+        raise ValueError(f"partitions {bad.tolist()} exceed capacity {capacity}: {w[bad].tolist()}")

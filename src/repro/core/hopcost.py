@@ -1,0 +1,90 @@
+"""Average-hop evaluation (paper §3.4.2, Algorithm 1).
+
+The paper's key engineering insight: under static XY routing the hop count
+of a spike is just the Manhattan distance between source and destination
+cores, so the search loop can score a candidate mapping analytically
+instead of invoking a hardware simulator.  This file is the host/numpy
+reference; `repro.kernels.hop_eval` is the Pallas TPU version and
+`repro.kernels.swap_delta` batch-evaluates SA neighborhoods.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "traffic_matrix",
+    "core_coords",
+    "hop_distance_matrix",
+    "average_hop",
+    "swap_delta",
+]
+
+
+def traffic_matrix(
+    part: np.ndarray, trace_src: np.ndarray, trace_dst: np.ndarray, k: int
+) -> np.ndarray:
+    """C[i, j] = number of spikes sent from partition i to partition j.
+
+    Built from the spike trace (Algorithm 1 lines 5-9); the diagonal holds
+    intra-partition spikes, which never enter the NoC (0 hops).
+    """
+    pi = part[trace_src].astype(np.int64)
+    pj = part[trace_dst].astype(np.int64)
+    flat = np.bincount(pi * k + pj, minlength=k * k)
+    return flat.reshape(k, k).astype(np.int64)
+
+
+def core_coords(num_cores: int, mesh_w: int) -> np.ndarray:
+    """(num_cores, 2) int array of (x, y) for row-major core ids."""
+    ids = np.arange(num_cores)
+    return np.stack([ids % mesh_w, ids // mesh_w], axis=1)
+
+
+def hop_distance_matrix(num_cores: int, mesh_w: int, torus: bool = False) -> np.ndarray:
+    """(num_cores, num_cores) hop distances under XY routing.
+
+    `torus=False` is the paper's NoC mesh (plain Manhattan); `torus=True`
+    is the TPU-ICI variant with wraparound links (used by the beyond-paper
+    device-layout optimizer, see DESIGN.md §3).
+    """
+    c = core_coords(num_cores, mesh_w)
+    dx = np.abs(c[:, None, 0] - c[None, :, 0])
+    dy = np.abs(c[:, None, 1] - c[None, :, 1])
+    if torus:
+        w = mesh_w
+        h = (num_cores + mesh_w - 1) // mesh_w
+        dx = np.minimum(dx, w - dx)
+        dy = np.minimum(dy, h - dy)
+    return (dx + dy).astype(np.int32)
+
+
+def average_hop(
+    traffic: np.ndarray,
+    placement: np.ndarray,
+    dist: np.ndarray,
+    trace_length: int,
+) -> float:
+    """H = sum_{a,b} d(M(a), M(b)) * C(a, b) / trace_length  (Algorithm 1)."""
+    d = dist[placement[:, None], placement[None, :]]
+    return float((d * traffic).sum() / trace_length)
+
+
+def swap_delta(
+    sym_traffic: np.ndarray,
+    placement: np.ndarray,
+    dist: np.ndarray,
+    a: int,
+    b: int,
+) -> float:
+    """Change in total hop-weighted traffic if partitions a and b swap cores.
+
+    `sym_traffic` must be C + C.T.  O(k) instead of re-evaluating the full
+    O(k^2) objective — the SA inner-loop trick.
+    """
+    ca, cb = placement[a], placement[b]
+    d_a = dist[ca, placement]
+    d_b = dist[cb, placement]
+    diff = (sym_traffic[a] - sym_traffic[b]) * (d_b - d_a)
+    # Exclude j in {a, b}: the a<->b term is invariant (d symmetric) and the
+    # self terms ride on the zero diagonal of dist but not of sym_traffic diff.
+    return float(diff.sum() - diff[a] - diff[b])

@@ -1,0 +1,81 @@
+"""Initial partitioning step of the multilevel paradigm (paper §3.3).
+
+Greedy region growing on the coarsest graph G_c: seed each partition with a
+random unassigned vertex, then repeatedly pull in the unassigned vertex
+connected to the partition by the heaviest edge, until the partition's
+total vertex weight reaches the capacity bound (the number of neurons a
+neuromorphic core can accommodate).
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from .graph import Graph
+
+__all__ = ["greedy_region_growing"]
+
+
+def greedy_region_growing(
+    graph: Graph,
+    k: int,
+    capacity: int,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """Return part[v] in [0, k) with per-partition vertex weight <= capacity."""
+    n = graph.num_vertices
+    if k * capacity < graph.total_vwgt:
+        raise ValueError(
+            f"infeasible: k={k} cores x capacity={capacity} < total weight {graph.total_vwgt}"
+        )
+    part = np.full(n, -1, dtype=np.int64)
+    pweight = np.zeros(k, dtype=np.int64)
+    xadj, adjncy, adjwgt, vwgt = graph.xadj, graph.adjncy, graph.adjwgt, graph.vwgt
+    seed_order = iter(rng.permutation(n))
+
+    def next_seed() -> int | None:
+        for s in seed_order:
+            if part[s] == -1:
+                return int(s)
+        return None
+
+    for p in range(k):
+        seed = next_seed()
+        if seed is None:
+            break
+        if pweight[p] + vwgt[seed] > capacity:
+            continue  # degenerate: oversized single vertex for remaining space
+        part[seed] = p
+        pweight[p] += vwgt[seed]
+        # Max-heap of (−edge weight, vertex) edges from the partition frontier.
+        heap: list[tuple[int, int]] = []
+        s, e = xadj[seed], xadj[seed + 1]
+        for u, w in zip(adjncy[s:e], adjwgt[s:e]):
+            heapq.heappush(heap, (-int(w), int(u)))
+        while heap:
+            negw, u = heapq.heappop(heap)
+            if part[u] != -1:
+                continue
+            if pweight[p] + vwgt[u] > capacity:
+                continue  # skip; a lighter frontier vertex may still fit
+            part[u] = p
+            pweight[p] += vwgt[u]
+            s, e = xadj[u], xadj[u + 1]
+            for v2, w2 in zip(adjncy[s:e], adjwgt[s:e]):
+                if part[v2] == -1:
+                    heapq.heappush(heap, (-int(w2), int(v2)))
+
+    # Leftovers (disconnected or skipped): place into lightest feasible partition.
+    for v in np.nonzero(part == -1)[0]:
+        order = np.argsort(pweight, kind="stable")
+        placed = False
+        for p in order:
+            if pweight[p] + vwgt[v] <= capacity:
+                part[v] = p
+                pweight[p] += vwgt[v]
+                placed = True
+                break
+        if not placed:
+            raise RuntimeError("could not place vertex within capacity — infeasible instance")
+    return part

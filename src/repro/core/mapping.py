@@ -1,0 +1,245 @@
+"""Mapping phase: place partitions on the NoC mesh (paper §3.4).
+
+Three heuristic searches over placements — Simulated Annealing (the
+paper's winner), Particle Swarm Optimization (SpiNeMap's placer), and Tabu
+search — all scored by the analytic average-hop evaluator instead of a
+hardware simulator.
+
+Placements are represented as a permutation of all `num_cores` cores: the
+traffic matrix is zero-padded with `num_cores - k` virtual partitions, so a
+"swap with a virtual partition" implements moving a real partition to an
+empty core.  All three searches share the same neighborhood (swap two
+positions) and the same objective (Eq. 2: minimize average hop H).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .hopcost import hop_distance_matrix, swap_delta
+
+__all__ = ["MappingResult", "pad_traffic", "sa_search", "tabu_search", "pso_search", "MAPPERS"]
+
+
+@dataclass
+class MappingResult:
+    placement: np.ndarray  # (k,) core id per (real) partition
+    avg_hop: float
+    seconds: float
+    # Convergence history: (elapsed_seconds, best_avg_hop) samples (Fig 5).
+    history: list[tuple[float, float]] = field(default_factory=list)
+    evaluations: int = 0
+
+
+def pad_traffic(traffic: np.ndarray, num_cores: int) -> np.ndarray:
+    """Zero-pad a (k, k) traffic matrix to (num_cores, num_cores)."""
+    k = traffic.shape[0]
+    if k > num_cores:
+        raise ValueError(f"{k} partitions > {num_cores} cores")
+    out = np.zeros((num_cores, num_cores), dtype=np.float64)
+    out[:k, :k] = traffic
+    return out
+
+
+def _total_cost(sym: np.ndarray, placement: np.ndarray, dist: np.ndarray) -> float:
+    d = dist[placement[:, None], placement[None, :]]
+    return float((d * sym).sum() / 2.0)
+
+
+def sa_search(
+    traffic: np.ndarray,
+    num_cores: int,
+    mesh_w: int,
+    trace_length: int,
+    seed: int = 0,
+    time_budget: float | None = None,
+    iters: int = 20_000,
+    t0_frac: float = 0.25,
+    alpha: float = 0.95,
+    sweeps_per_temp: int | None = None,
+    torus: bool = False,
+    init: np.ndarray | None = None,
+) -> MappingResult:
+    """Simulated annealing over placements (paper §3.4.1).
+
+    Accepts uphill moves with prob exp(-delta/T); geometric cooling.  The
+    O(k) incremental `swap_delta` makes each step cheap — the analytic-eval
+    insight that gives SNEAP its end-to-end speedup.  `init` seeds the
+    chain (e.g. the identity layout for mesh-layout optimization); the
+    returned best never regresses below the seed.
+    """
+    start = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    k = traffic.shape[0]
+    padded = pad_traffic(traffic, num_cores)
+    sym = padded + padded.T
+    dist = hop_distance_matrix(num_cores, mesh_w, torus=torus).astype(np.float64)
+
+    placement = (np.asarray(init, dtype=np.int64).copy() if init is not None
+                 else rng.permutation(num_cores).astype(np.int64))
+    cost = _total_cost(sym, placement, dist)
+    best = placement.copy()
+    best_cost = cost
+    # Initial temperature: a fraction of the initial per-spike cost scale.
+    T = max(t0_frac * cost / max(k, 1), 1e-9)
+    if sweeps_per_temp is None:
+        sweeps_per_temp = max(num_cores, 32)
+    history = [(0.0, best_cost / trace_length)]
+    evals = 0
+    it = 0
+    while it < iters:
+        improved_at_temp = False
+        for _ in range(sweeps_per_temp):
+            a = int(rng.integers(num_cores))
+            b = int(rng.integers(num_cores - 1))
+            b = b + 1 if b >= a else b
+            delta = swap_delta(sym, placement, dist, a, b)
+            evals += 1
+            it += 1
+            if delta <= 0 or rng.random() < np.exp(-delta / T):
+                placement[a], placement[b] = placement[b], placement[a]
+                cost += delta
+                if cost < best_cost - 1e-9:
+                    best_cost = cost
+                    best = placement.copy()
+                    improved_at_temp = True
+                    history.append((time.perf_counter() - start, best_cost / trace_length))
+            if time_budget is not None and time.perf_counter() - start > time_budget:
+                it = iters
+                break
+        T *= alpha
+        if T < 1e-12 and not improved_at_temp:
+            break
+    seconds = time.perf_counter() - start
+    # Recompute exactly from the best placement (guards incremental drift).
+    avg = _total_cost(sym, best, dist) / trace_length
+    history.append((seconds, avg))
+    return MappingResult(placement=best[:k], avg_hop=float(avg), seconds=seconds,
+                         history=history, evaluations=evals)
+
+
+def tabu_search(
+    traffic: np.ndarray,
+    num_cores: int,
+    mesh_w: int,
+    trace_length: int,
+    seed: int = 0,
+    time_budget: float | None = None,
+    iters: int = 400,
+    tenure: int | None = None,
+    candidates: int = 256,
+    torus: bool = False,
+) -> MappingResult:
+    """Tabu search: best-of-candidate-swaps with a recency tabu list."""
+    start = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    k = traffic.shape[0]
+    padded = pad_traffic(traffic, num_cores)
+    sym = padded + padded.T
+    dist = hop_distance_matrix(num_cores, mesh_w, torus=torus).astype(np.float64)
+    if tenure is None:
+        tenure = max(8, num_cores // 4)
+
+    placement = rng.permutation(num_cores).astype(np.int64)
+    cost = _total_cost(sym, placement, dist)
+    best, best_cost = placement.copy(), cost
+    tabu_until = np.zeros((num_cores, num_cores), dtype=np.int64)
+    history = [(0.0, best_cost / trace_length)]
+    evals = 0
+    for step in range(iters):
+        pairs_a = rng.integers(0, num_cores, size=candidates)
+        pairs_b = rng.integers(0, num_cores, size=candidates)
+        chosen = None
+        chosen_delta = None
+        for a, b in zip(pairs_a, pairs_b):
+            if a == b:
+                continue
+            a, b = int(min(a, b)), int(max(a, b))
+            delta = swap_delta(sym, placement, dist, a, b)
+            evals += 1
+            is_tabu = tabu_until[a, b] > step
+            aspires = cost + delta < best_cost - 1e-9
+            if is_tabu and not aspires:
+                continue
+            if chosen_delta is None or delta < chosen_delta:
+                chosen, chosen_delta = (a, b), delta
+        if chosen is None:
+            break
+        a, b = chosen
+        placement[a], placement[b] = placement[b], placement[a]
+        cost += chosen_delta
+        tabu_until[a, b] = step + tenure
+        if cost < best_cost - 1e-9:
+            best_cost = cost
+            best = placement.copy()
+            history.append((time.perf_counter() - start, best_cost / trace_length))
+        if time_budget is not None and time.perf_counter() - start > time_budget:
+            break
+    seconds = time.perf_counter() - start
+    avg = _total_cost(sym, best, dist) / trace_length
+    history.append((seconds, avg))
+    return MappingResult(placement=best[:k], avg_hop=float(avg), seconds=seconds,
+                         history=history, evaluations=evals)
+
+
+def pso_search(
+    traffic: np.ndarray,
+    num_cores: int,
+    mesh_w: int,
+    trace_length: int,
+    seed: int = 0,
+    time_budget: float | None = None,
+    iters: int = 200,
+    swarm: int = 32,
+    w: float = 0.72,
+    c1: float = 1.49,
+    c2: float = 1.49,
+    torus: bool = False,
+) -> MappingResult:
+    """Random-key PSO (SpiNeMap's placer, §2.2): particles are continuous
+    priority vectors; argsort decodes a vector into a core permutation."""
+    start = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    k = traffic.shape[0]
+    padded = pad_traffic(traffic, num_cores)
+    sym = padded + padded.T
+    dist = hop_distance_matrix(num_cores, mesh_w, torus=torus).astype(np.float64)
+
+    def decode(x: np.ndarray) -> np.ndarray:
+        return np.argsort(x).astype(np.int64)
+
+    pos = rng.standard_normal((swarm, num_cores))
+    vel = np.zeros_like(pos)
+    pbest = pos.copy()
+    pbest_cost = np.array([_total_cost(sym, decode(p), dist) for p in pos])
+    g = int(np.argmin(pbest_cost))
+    gbest, gbest_cost = pbest[g].copy(), float(pbest_cost[g])
+    history = [(0.0, gbest_cost / trace_length)]
+    evals = swarm
+    for _ in range(iters):
+        r1 = rng.random((swarm, num_cores))
+        r2 = rng.random((swarm, num_cores))
+        vel = w * vel + c1 * r1 * (pbest - pos) + c2 * r2 * (gbest[None, :] - pos)
+        pos = pos + vel
+        costs = np.array([_total_cost(sym, decode(p), dist) for p in pos])
+        evals += swarm
+        better = costs < pbest_cost
+        pbest[better] = pos[better]
+        pbest_cost[better] = costs[better]
+        g = int(np.argmin(pbest_cost))
+        if pbest_cost[g] < gbest_cost - 1e-9:
+            gbest, gbest_cost = pbest[g].copy(), float(pbest_cost[g])
+            history.append((time.perf_counter() - start, gbest_cost / trace_length))
+        if time_budget is not None and time.perf_counter() - start > time_budget:
+            break
+    seconds = time.perf_counter() - start
+    placement = decode(gbest)
+    avg = _total_cost(sym, placement, dist) / trace_length
+    history.append((seconds, avg))
+    return MappingResult(placement=placement[:k], avg_hop=float(avg), seconds=seconds,
+                         history=history, evaluations=evals)
+
+
+MAPPERS = {"sa": sa_search, "pso": pso_search, "tabu": tabu_search}

@@ -1,0 +1,79 @@
+"""SNEAP partitioning phase: the multilevel driver (paper §3.3).
+
+Coarsening -> initial partitioning -> uncoarsening with refinement,
+minimizing the number of spikes communicated between partitions under the
+neuromorphic-core capacity constraint (<= `capacity` neurons/core).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from .coarsen import coarsen
+from .graph import Graph, edge_cut, partition_weights, validate_partition
+from .initpart import greedy_region_growing
+from .refine import uncoarsen
+
+__all__ = ["PartitionResult", "sneap_partition"]
+
+
+@dataclass
+class PartitionResult:
+    part: np.ndarray  # (n,) partition id per neuron
+    k: int
+    edge_cut: int  # spikes communicated between partitions ("global traffic")
+    capacity: int
+    num_levels: int
+    seconds: float
+
+    def partition_sizes(self, graph: Graph) -> np.ndarray:
+        return partition_weights(graph, self.part, self.k)
+
+
+def sneap_partition(
+    graph: Graph,
+    capacity: int = 256,
+    k: int | None = None,
+    seed: int = 0,
+    coarsen_to: int | None = None,
+    max_nonimproving: int = 64,
+    slack: float = 1.10,
+    max_k: int | None = None,
+) -> PartitionResult:
+    """Partition an SNN graph into k parts of <= `capacity` neurons each.
+
+    Args:
+      graph: spike-weighted CSR graph from the profiling phase.
+      capacity: neurons per neuromorphic core (256 for the paper's crossbars).
+      k: number of partitions; default = ceil(total_neurons / capacity) with
+         ~10% slack so refinement has room to move vertices.
+      slack: multiplies k upward when k is derived (never above feasibility).
+    """
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    total = graph.total_vwgt
+    min_k = math.ceil(total / capacity)
+    if k is None:
+        k = max(min_k, math.ceil(min_k * slack))
+        if max_k is not None:
+            k = min(k, max_k)  # cannot exceed the mesh's core count
+    if k < min_k:
+        raise ValueError(f"k={k} infeasible; need >= {min_k} cores of capacity {capacity}")
+    if coarsen_to is None:
+        coarsen_to = max(4 * k, 128)
+
+    # Coarse vertices must stay well under capacity or region growing jams.
+    max_vwgt = max(1, capacity // 3)
+    levels = coarsen(graph, rng, coarsen_to=coarsen_to, max_vwgt=max_vwgt)
+    coarse_part = greedy_region_growing(levels[-1], k, capacity, rng)
+    part, cut = uncoarsen(levels, coarse_part, k, capacity, max_nonimproving)
+    seconds = time.perf_counter() - t0
+    validate_partition(graph, part, k, capacity)
+    assert cut == edge_cut(graph, part), "incremental cut bookkeeping diverged"
+    return PartitionResult(
+        part=part, k=k, edge_cut=cut, capacity=capacity,
+        num_levels=len(levels), seconds=seconds,
+    )

@@ -1,0 +1,119 @@
+"""End-to-end SNEAP toolchain: profile -> partition -> map -> evaluate.
+
+Also drives the two baseline toolchains (SpiNeMap, SCO) over the same
+profiled trace so the paper's Figures 4-8 comparisons are apples-to-apples.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.nocsim import NoCStats, simulate_noc
+
+if TYPE_CHECKING:  # avoid core <-> snn circular import; only a type hint
+    from repro.snn.simulate import ProfileResult
+
+from .baselines import greedy_kl_partition, sco_partition, sco_place
+from .hopcost import hop_distance_matrix, traffic_matrix
+from .mapping import MAPPERS, MappingResult
+from .partition import PartitionResult, sneap_partition
+
+__all__ = ["ToolchainResult", "run_toolchain"]
+
+
+@dataclass
+class ToolchainResult:
+    method: str
+    snn: str
+    partition: PartitionResult
+    mapping: MappingResult
+    noc: NoCStats
+    phase_seconds: dict = field(default_factory=dict)
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.phase_seconds.values())
+
+    def summary(self) -> dict:
+        return {
+            "method": self.method,
+            "snn": self.snn,
+            "k": self.partition.k,
+            "edge_cut": self.partition.edge_cut,
+            "avg_hop": self.mapping.avg_hop,
+            "avg_latency": self.noc.avg_latency,
+            "energy_pj": self.noc.dynamic_energy_pj,
+            "congestion": self.noc.congestion_count,
+            "edge_var": self.noc.edge_variance,
+            "partition_s": self.phase_seconds.get("partition", 0.0),
+            "mapping_s": self.phase_seconds.get("mapping", 0.0),
+            "total_s": self.total_seconds,
+        }
+
+
+def run_toolchain(
+    profile: "ProfileResult",
+    method: str = "sneap",
+    mesh_w: int = 5,
+    mesh_h: int = 5,
+    capacity: int = 256,
+    mapper: str = "sa",
+    seed: int = 0,
+    noc_mode: str = "queued",
+    link_capacity: int = 4,
+    mapper_kwargs: dict | None = None,
+) -> ToolchainResult:
+    """Run one toolchain (sneap | spinemap | sco) over a profiled SNN.
+
+    * sneap:    multilevel partitioning + SA placement (paper default).
+    * spinemap: greedy-KL partitioning + PSO placement.
+    * sco:      sequential packing + sequential placement.
+    """
+    num_cores = mesh_w * mesh_h
+    phase: dict[str, float] = {}
+    mapper_kwargs = dict(mapper_kwargs or {})
+
+    t0 = time.perf_counter()
+    if method == "sneap":
+        pres = sneap_partition(profile.graph, capacity=capacity, seed=seed,
+                               max_k=num_cores)
+    elif method == "spinemap":
+        pres = greedy_kl_partition(profile.graph, capacity=capacity, seed=seed,
+                                   max_k=num_cores)
+    elif method == "sco":
+        pres = sco_partition(profile.graph, capacity=capacity)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    phase["partition"] = time.perf_counter() - t0
+    if pres.k > num_cores:
+        raise ValueError(
+            f"{pres.k} partitions exceed {num_cores} cores; enlarge mesh or capacity"
+        )
+
+    t0 = time.perf_counter()
+    traffic = traffic_matrix(pres.part, profile.trace_src, profile.trace_dst, pres.k)
+    trace_len = profile.num_spikes
+    if method == "sco":
+        mres = sco_place(pres.k, num_cores)
+        dist = hop_distance_matrix(num_cores, mesh_w)
+        d = dist[mres.placement[:, None], mres.placement[None, :]]
+        mres.avg_hop = float((d * traffic).sum() / trace_len)
+    else:
+        search = MAPPERS["pso" if method == "spinemap" else mapper]
+        mres = search(traffic, num_cores, mesh_w, trace_len, seed=seed, **mapper_kwargs)
+    phase["mapping"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    noc = simulate_noc(
+        profile.trace_t, profile.trace_src, profile.trace_dst,
+        pres.part, mres.placement, mesh_w, mesh_h,
+        link_capacity=link_capacity, mode=noc_mode,
+    )
+    phase["evaluate"] = time.perf_counter() - t0
+    return ToolchainResult(
+        method=method, snn=profile.name, partition=pres, mapping=mres,
+        noc=noc, phase_seconds=phase,
+    )

@@ -1,0 +1,149 @@
+"""Uncoarsening + boundary refinement (paper §3.3).
+
+The partitioning of the coarsest graph is projected back level by level.
+At every level a refinement pass runs with a single global priority queue:
+vertices whose total external degree (ED) is >= their internal degree (ID)
+enter the queue with gain = max_b ED[v]_b − ID[v]; the highest-gain vertex
+moves to its best partition b (subject to core capacity).  Moves continue
+until `x` consecutive moves fail to decrease the inter-partition edge
+weight, at which point the trailing non-improving moves are undone.
+
+As the paper notes, this single-queue / boundary-only scheme has weaker
+hill-climbing than full Kernighan–Lin, but is dramatically faster — that
+trade is the point of the multilevel paradigm.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+
+import numpy as np
+
+from .graph import Graph
+
+__all__ = ["refine_level", "project", "uncoarsen"]
+
+
+def _degrees(graph: Graph, part: np.ndarray, v: int, k: int) -> tuple[int, np.ndarray]:
+    """Return (ID[v], ED[v] as a (k,) array)."""
+    nbrs, wgts = graph.neighbors(v)
+    per_part = np.bincount(part[nbrs], weights=wgts, minlength=k)
+    own = part[v]
+    internal = per_part[own]
+    per_part = per_part.copy()
+    per_part[own] = 0
+    return int(internal), per_part
+
+
+def refine_level(
+    graph: Graph,
+    part: np.ndarray,
+    k: int,
+    capacity: int,
+    max_nonimproving: int = 64,
+    max_passes: int = 4,
+) -> tuple[np.ndarray, int]:
+    """Refine `part` in place over up to `max_passes` FM-style passes.
+
+    Returns (part, edge_cut).
+    """
+    from .graph import edge_cut, partition_weights
+
+    part = part.astype(np.int64)
+    pweight = partition_weights(graph, part, k)
+    cut = edge_cut(graph, part)
+    counter = itertools.count()
+
+    for _ in range(max_passes):
+        start_cut = cut
+        locked = np.zeros(graph.num_vertices, dtype=bool)
+        heap: list[tuple[int, int, int]] = []
+
+        def push(v: int) -> None:
+            internal, ext = _degrees(graph, part, v, k)
+            if ext.sum() >= internal and ext.sum() > 0:
+                b = int(np.argmax(ext))
+                gain = int(ext[b]) - internal
+                heapq.heappush(heap, (-gain, next(counter), v))
+
+        for v in range(graph.num_vertices):
+            push(v)
+
+        history: list[tuple[int, int, int]] = []  # (vertex, from, to)
+        best_cut = cut
+        best_len = 0
+        since_best = 0
+
+        while heap and since_best < max_nonimproving:
+            neg_gain, _, v = heapq.heappop(heap)
+            if locked[v]:
+                continue
+            internal, ext = _degrees(graph, part, v, k)
+            if ext.sum() == 0 or ext.sum() < internal:
+                continue
+            # Re-derive the best target under the capacity constraint.
+            order = np.argsort(-ext, kind="stable")
+            target = -1
+            for b in order:
+                if ext[b] <= 0:
+                    break
+                if pweight[b] + graph.vwgt[v] <= capacity:
+                    target = int(b)
+                    break
+            if target < 0:
+                continue
+            gain = int(ext[target]) - internal
+            if -neg_gain != gain:
+                # Stale entry — requeue with the fresh gain.
+                heapq.heappush(heap, (-gain, next(counter), v))
+                continue
+
+            src = int(part[v])
+            part[v] = target
+            pweight[src] -= graph.vwgt[v]
+            pweight[target] += graph.vwgt[v]
+            cut -= gain
+            locked[v] = True
+            history.append((v, src, target))
+            if cut < best_cut:
+                best_cut = cut
+                best_len = len(history)
+                since_best = 0
+            else:
+                since_best += 1
+            nbrs, _ = graph.neighbors(v)
+            for u in nbrs:
+                if not locked[u]:
+                    push(int(u))
+
+        # Undo the trailing non-improving moves (paper: "the last x moves are undone").
+        for v, src, target in reversed(history[best_len:]):
+            part[v] = src
+            pweight[src] += graph.vwgt[v]
+            pweight[target] -= graph.vwgt[v]
+        cut = best_cut
+
+        if cut >= start_cut:
+            break
+    return part, cut
+
+
+def project(coarse_part: np.ndarray, cmap: np.ndarray) -> np.ndarray:
+    """Project a coarse partition vector onto the finer graph via cmap."""
+    return coarse_part[cmap]
+
+
+def uncoarsen(
+    levels: list[Graph],
+    coarse_part: np.ndarray,
+    k: int,
+    capacity: int,
+    max_nonimproving: int = 64,
+) -> tuple[np.ndarray, int]:
+    """Walk levels coarse→fine, projecting and refining at each level."""
+    part = coarse_part
+    part, cut = refine_level(levels[-1], part, k, capacity, max_nonimproving)
+    for fine, coarse in zip(reversed(levels[:-1]), reversed(levels[1:])):
+        part = project(part, coarse.cmap)
+        part, cut = refine_level(fine, part, k, capacity, max_nonimproving)
+    return part, cut

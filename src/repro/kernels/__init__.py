@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the toolchain's compute hot spots.
+
+The paper's performance insight is replacing simulator calls with analytic
+evaluation inside the mapping search loop; these kernels push that one
+level further by making the evaluation itself a tiled on-chip reduction
+and by batch-evaluating entire SA swap neighborhoods on the MXU.
+
+  hop_eval   — Algorithm 1: traffic x Manhattan-distance reduction.
+  swap_delta — all-pairs SA swap deltas via a fused S @ D matmul epilogue.
+  lif_step   — LIF membrane update + spike detect (profiling hot spot).
+  link_load  — per-link XY load histogram (edge variance / congestion).
+
+Each kernel subpackage carries `kernel.py` (pl.pallas_call + BlockSpec),
+`ops.py` (jit'd public wrapper, `interpret=` switch), and `ref.py` (the
+pure-jnp oracle used by tests and as the CPU fallback).
+"""

@@ -1,0 +1,38 @@
+"""Public wrapper for the hop-cost kernel.
+
+On CPU (this container) the Pallas kernel runs in interpret mode; on TPU
+it compiles natively.  `backend="jnp"` selects the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import hop_cost_pallas
+from .ref import hop_cost_ref
+
+__all__ = ["hop_cost"]
+
+
+def hop_cost(
+    traffic: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Total hop-weighted traffic: sum C[a,b] * manhattan(a, b).
+
+    backend: "auto" (pallas on TPU, interpret elsewhere), "pallas",
+    "interpret", or "jnp" (oracle).
+    """
+    if backend == "jnp":
+        return hop_cost_ref(traffic.astype(jnp.float32), x.astype(jnp.float32),
+                            y.astype(jnp.float32))
+    if backend == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        return hop_cost_pallas(traffic, x, y, interpret=not on_tpu)
+    if backend == "pallas":
+        return hop_cost_pallas(traffic, x, y, interpret=False)
+    if backend == "interpret":
+        return hop_cost_pallas(traffic, x, y, interpret=True)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the hop-cost reduction (paper Algorithm 1).
+
+H_total = sum_{a,b} C[a,b] * (|x_a - x_b| + |y_a - y_b|)
+
+where (x_i, y_i) is the mesh coordinate of the core partition i is placed
+on.  `average hop` = H_total / trace_length (done by the caller: the
+kernel's job is the O(K^2) contraction).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["hop_cost_ref"]
+
+
+def hop_cost_ref(traffic: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """traffic: (K, K) f32; x, y: (K,) f32 placed coordinates. Returns scalar f32."""
+    dx = jnp.abs(x[:, None] - x[None, :])
+    dy = jnp.abs(y[:, None] - y[None, :])
+    return jnp.sum(traffic * (dx + dy), dtype=jnp.float32)

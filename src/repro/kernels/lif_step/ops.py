@@ -1,0 +1,35 @@
+"""Public wrapper for the LIF step kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import lif_step_pallas
+from .ref import lif_step_ref
+
+__all__ = ["lif_step"]
+
+
+def lif_step(
+    v: jnp.ndarray,
+    refr: jnp.ndarray,
+    current: jnp.ndarray,
+    *,
+    decay: float,
+    threshold: float,
+    v_reset: float,
+    refractory: int,
+    backend: str = "auto",
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    kw = dict(decay=float(decay), threshold=float(threshold),
+              v_reset=float(v_reset), refractory=int(refractory))
+    if backend == "jnp":
+        return lif_step_ref(v, refr, current, **kw)
+    if backend == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        return lif_step_pallas(v, refr, current, interpret=not on_tpu, **kw)
+    if backend == "pallas":
+        return lif_step_pallas(v, refr, current, interpret=False, **kw)
+    if backend == "interpret":
+        return lif_step_pallas(v, refr, current, interpret=True, **kw)
+    raise ValueError(f"unknown backend {backend!r}")

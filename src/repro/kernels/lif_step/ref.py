@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the LIF membrane-update step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lif_step_ref"]
+
+
+def lif_step_ref(
+    v: jnp.ndarray,
+    refr: jnp.ndarray,
+    current: jnp.ndarray,
+    *,
+    decay: float,
+    threshold: float,
+    v_reset: float,
+    refractory: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One LIF step over any shape. Returns (v', refr', fired:bool)."""
+    active = refr <= 0
+    v2 = jnp.where(active, decay * v + current, v)
+    fired = active & (v2 >= threshold)
+    v_out = jnp.where(fired, v_reset, v2)
+    refr_out = jnp.where(fired, refractory, jnp.maximum(refr - 1, 0)).astype(refr.dtype)
+    return v_out, refr_out, fired

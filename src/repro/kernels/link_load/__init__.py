@@ -1,0 +1,4 @@
+from .ops import link_loads
+from .ref import link_loads_ref
+
+__all__ = ["link_loads", "link_loads_ref"]

@@ -1,0 +1,47 @@
+"""Public wrapper: per-link XY load maps + edge variance."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import link_loads_pallas
+from .ref import link_loads_ref
+
+__all__ = ["link_loads", "edge_variance"]
+
+
+def link_loads(
+    traffic: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    mesh_w: int,
+    mesh_h: int,
+    backend: str = "auto",
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    if backend == "jnp":
+        return link_loads_ref(traffic, x, y, mesh_w, mesh_h)
+    if backend == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        return link_loads_pallas(traffic, x, y, mesh_w=mesh_w, mesh_h=mesh_h,
+                                 interpret=not on_tpu)
+    if backend == "pallas":
+        return link_loads_pallas(traffic, x, y, mesh_w=mesh_w, mesh_h=mesh_h,
+                                 interpret=False)
+    if backend == "interpret":
+        return link_loads_pallas(traffic, x, y, mesh_w=mesh_w, mesh_h=mesh_h,
+                                 interpret=True)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def edge_variance(
+    traffic: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    mesh_w: int,
+    mesh_h: int,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Paper Eq. 4-5 over partition-level traffic (per-edge total hops)."""
+    e, w_, s, n = link_loads(traffic, x, y, mesh_w, mesh_h, backend=backend)
+    flat = jnp.concatenate([e.ravel(), w_.ravel(), s.ravel(), n.ravel()])
+    return jnp.var(flat)

@@ -1,0 +1,4 @@
+from .ops import swap_deltas
+from .ref import swap_deltas_ref
+
+__all__ = ["swap_deltas", "swap_deltas_ref"]

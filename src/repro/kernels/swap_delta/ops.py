@@ -1,0 +1,33 @@
+"""Public wrapper: batched SA swap-delta evaluation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import swap_deltas_pallas
+from .ref import swap_deltas_ref
+
+__all__ = ["swap_deltas"]
+
+
+def swap_deltas(
+    sym: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """(K, K) matrix of hop-cost deltas for swapping partitions a and b.
+
+    `sym` must be the symmetrized traffic C + C^T (zero-padded to the core
+    count if virtual partitions are in play).
+    """
+    if backend == "jnp":
+        return swap_deltas_ref(sym, x.astype(jnp.float32), y.astype(jnp.float32))
+    if backend == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        return swap_deltas_pallas(sym, x, y, interpret=not on_tpu)
+    if backend == "pallas":
+        return swap_deltas_pallas(sym, x, y, interpret=False)
+    if backend == "interpret":
+        return swap_deltas_pallas(sym, x, y, interpret=True)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for all-pairs SA swap deltas.
+
+For symmetric traffic S = C + C^T and placed-distance matrix
+D[i, j] = manhattan(place_i, place_j), the change in total hop-weighted
+traffic when partitions a and b exchange cores is
+
+  delta[a, b] = (S D)[a, b] + (D S)[a, b] - r[a] - r[b]
+                - (S[a, a] + S[b, b] - 2 S[a, b]) * D[a, b]
+
+with r[a] = sum_j S[a, j] D[a, j].  This is the matrix form of the paper's
+O(K) incremental swap evaluation (`repro.core.hopcost.swap_delta`), lifted
+to evaluate the *entire* O(K^2) neighborhood as two matmuls — the MXU
+reformulation the Pallas kernel implements.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["swap_deltas_ref", "distance_matrix"]
+
+
+def distance_matrix(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return (jnp.abs(x[:, None] - x[None, :]) + jnp.abs(y[:, None] - y[None, :])).astype(jnp.float32)
+
+
+def swap_deltas_ref(sym: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """sym: (K, K) f32 symmetric traffic; x, y: (K,) f32. Returns (K, K) f32."""
+    sym = sym.astype(jnp.float32)
+    d = distance_matrix(x, y)
+    sd = sym @ d
+    ds = d @ sym
+    r = jnp.sum(sym * d, axis=1)
+    diag = jnp.diagonal(sym)
+    delta = sd + ds - r[:, None] - r[None, :] - (diag[:, None] + diag[None, :] - 2.0 * sym) * d
+    return delta

@@ -1,0 +1,1 @@
+"""Launchers: mesh construction, jitted train/serve steps, dry-run, roofline."""

@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  The two lines above are the only code allowed before this
+# docstring per the dry-run contract.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:   jax.jit(step, in_shardings=..., out_shardings=...)
+                    .lower(**ShapeDtypeStructs).compile()
+must SUCCEED on the single-pod 16x16 mesh and the 2x16x16 multi-pod mesh.
+The compiled artifact yields cost_analysis (FLOPs / bytes), memory
+analysis, and the partitioned HLO whose collective operand bytes feed the
+roofline (launch/roofline.py).  Results append to a JSONL ledger so the
+sweep is resumable.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES, applicable, input_specs
+from repro.launch.hlo_analysis import collective_bytes, op_census
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = ["run_cell", "main"]
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def _memory_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        out = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                out[k] = int(getattr(ma, k))
+        return out
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, kv_chunk: int = 1024,
+             zero1: bool = True, remat: bool = True, verbose: bool = True,
+             unroll: bool = False, ssm_chunk: int | None = None) -> dict:
+    """Lower+compile one cell; returns the JSONL record.
+
+    unroll=True unrolls the layer scan (and uses it for roofline FLOP /
+    collective-byte measurement — XLA cost analysis visits a rolled while
+    body only once).  ssm_chunk overrides the SSD chunk so the unrolled
+    chunk count stays bounded at long sequences.
+    """
+    import dataclasses
+
+    from repro.models import model as model_mod
+
+    rec: dict = {"arch": arch, "shape": shape,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "kv_chunk": kv_chunk, "zero1": zero1, "remat": remat,
+                 "unroll": unroll}
+    cfg = get_config(arch)
+    if ssm_chunk is not None and cfg.ssm_state:
+        cfg = dataclasses.replace(cfg, ssm_chunk=ssm_chunk)
+        rec["ssm_chunk"] = ssm_chunk
+    model_mod.set_scan_unroll(unroll)
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        return rec
+    sp = SHAPES[shape]
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        specs = input_specs(cfg, shape)
+        if sp.kind == "train":
+            bundle = make_train_step(cfg, mesh, remat=remat, zero1=zero1,
+                                     kv_chunk=kv_chunk)
+            params_sds = jax.eval_shape(
+                lambda: bundle.model.init(jax.random.PRNGKey(0)))
+            opt_sds = jax.eval_shape(bundle.init_opt, params_sds)
+            batch = {k: v for k, v in specs.items()}
+            jitted = bundle.jit_for(batch)
+            lowered = jitted.lower(params_sds, opt_sds, batch)
+        elif sp.kind == "prefill":
+            bundle = make_prefill_step(cfg, mesh, cache_len=sp.seq_len,
+                                       kv_chunk=kv_chunk)
+            params_sds = jax.eval_shape(
+                lambda: bundle.model.init(jax.random.PRNGKey(0)))
+            batch = {k: v for k, v in specs.items()}
+            jitted = bundle.jit_for(batch)
+            lowered = jitted.lower(params_sds, batch)
+        else:  # decode
+            bundle = make_serve_step(cfg, mesh, cache_len=sp.seq_len,
+                                     kv_chunk=kv_chunk)
+            params_sds = jax.eval_shape(
+                lambda: bundle.model.init(jax.random.PRNGKey(0)))
+            caches_sds = jax.eval_shape(
+                lambda: bundle.model.init_caches(sp.global_batch, sp.seq_len))
+            jitted = bundle.jit_for(sp.global_batch)
+            lowered = jitted.lower(params_sds, caches_sds, specs["tokens"],
+                                   specs["positions"])
+        t_lower = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t1
+
+        hlo = compiled.as_text()
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            cost=_cost_analysis(compiled),
+            memory=_memory_analysis(compiled),
+            collectives=collective_bytes(hlo),
+            ops=op_census(hlo),
+            num_params=sum(int(v.size) for v in jax.tree.leaves(params_sds)),
+            plan_notes=bundle.plan.notes[:20],
+        )
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {rec['mesh']}: OK "
+                  f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+            print(f"  memory_analysis: {rec['memory']}")
+            print(f"  cost_analysis: flops={rec['cost'].get('flops')} "
+                  f"bytes={rec['cost'].get('bytes accessed')}")
+            print(f"  collectives: {rec['collectives']}")
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {shape} x {rec['mesh']}: "
+                  f"FAILED {type(e).__name__}: {e}")
+    return rec
+
+
+def _done_cells(path: Path) -> set[tuple]:
+    done = set()
+    if path.exists():
+        for line in path.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skip"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                continue
+    return done
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--kv-chunk", type=int, default=1024)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    archs = ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    done = set() if args.force else _done_cells(out)
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                key = (arch, shape, "2x16x16" if multi else "16x16")
+                if key in done:
+                    continue
+                rec = run_cell(arch, shape, multi, kv_chunk=args.kv_chunk,
+                               zero1=not args.no_zero1, remat=not args.no_remat)
+                with out.open("a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                n_ok += rec["status"] == "ok"
+                n_err += rec["status"] == "error"
+                n_skip += rec["status"] == "skip"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} errors -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Post-SPMD HLO analysis: collective bytes, op census, roofline inputs.
+
+Works on `compiled.as_text()` — the partitioned per-device module — so
+every shape is already the per-chip shape and summed collective operand
+bytes are per-chip wire bytes (what the ICI roofline term wants).
+
+HLO prints operands as bare `%name` references, so a first pass builds a
+name -> bytes table from every instruction's result type; the collective
+pass then sums the mapped operand sizes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "op_census", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.-]+)\s*=\s*(\([^=]*?\)|\S+)\s+(\S+?)\(")
+_OPERAND_RE = re.compile(r"%[\w.-]+")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        nbytes = DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes per collective opcode across the module.
+
+    Async `-start`/`-done` pairs are counted once (at -start).
+    Returns {"all-gather": bytes, ..., "_count": total op count}.
+    """
+    sizes: dict[str, int] = {}
+    # Pass 1: result sizes of every named instruction.
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, type_str = m.group(1), m.group(2)
+            sizes[name.lstrip("%")] = _shape_bytes(type_str)
+
+    totals: dict[str, int] = defaultdict(int)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        base = opcode.removesuffix("-start")
+        if base.endswith("-done") or base.rstrip(".0123456789") not in _COLLECTIVES:
+            # strip trailing .N id if printed as part of opcode (rare)
+            if base not in _COLLECTIVES:
+                continue
+        base = base if base in _COLLECTIVES else base.rstrip(".0123456789")
+        # Operands: %refs inside the first paren group.
+        args = line[m.end():]
+        close = args.find(")")
+        operand_str = args[:close] if close >= 0 else args
+        arg_bytes = 0
+        for ref in _OPERAND_RE.findall(operand_str):
+            arg_bytes += sizes.get(ref.lstrip("%"), 0)
+        if arg_bytes == 0:  # operand untracked: use result size as proxy
+            arg_bytes = _shape_bytes(m.group(2))
+        totals[base] += arg_bytes
+        counts[base] += 1
+    out = {k: int(v) for k, v in totals.items()}
+    out["_count"] = int(sum(counts.values()))
+    return out
+
+
+def op_census(hlo_text: str, opcodes=("fusion", "all-gather", "all-reduce",
+                                      "reduce-scatter", "all-to-all",
+                                      "collective-permute", "dot", "custom-call",
+                                      "copy", "transpose", "reshape",
+                                      "dynamic-update-slice")) -> dict[str, int]:
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3).removesuffix("-start")
+        base = opcode.rstrip(".0123456789")
+        if base in opcodes:
+            counts[base] += 1
+    return dict(counts)

@@ -1,0 +1,123 @@
+"""Assemble EXPERIMENTS.md tables from the results ledgers."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def load_jsonl(path, key=None):
+    out = {}
+    p = Path(path)
+    if not p.exists():
+        return out
+    for line in p.read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        k = key(r) if key else (r.get("arch"), r.get("shape"), r.get("mesh"))
+        out[k] = r  # last record wins
+    return out
+
+
+def dryrun_table() -> str:
+    cells = load_jsonl("results/dryrun.jsonl")
+    rows = ["| arch | shape | mesh | status | compile_s | args GB/chip | temp GB/chip | AR MB | AG MB | notes |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(cells.items()):
+        if r["status"] == "skip":
+            rows.append(f"| {arch} | {shape} | {mesh} | SKIP | — | — | — | — | — | "
+                        f"{r['reason'][:60]} |")
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("collectives", {})
+        args_gb = mem.get("argument_size_in_bytes", 0) / 2**30
+        temp_gb = mem.get("temp_size_in_bytes", 0) / 2**30
+        ar = coll.get("all-reduce", 0) / 2**20
+        ag = coll.get("all-gather", 0) / 2**20
+        note = (r.get("plan_notes") or [""])[0][:40]
+        rows.append(f"| {arch} | {shape} | {mesh} | {r['status'].upper()} | "
+                    f"{r.get('compile_s', 0):.1f} | {args_gb:.2f} | {temp_gb:.2f} | "
+                    f"{ar:.1f} | {ag:.1f} | {note} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    from repro.configs import get_config
+    from repro.launch.roofline import PEAK_FLOPS, model_flops, roofline_terms
+
+    cells = load_jsonl("results/roofline_raw.jsonl",
+                       key=lambda r: (r.get("arch"), r.get("shape")))
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | "
+            "6ND/HLO | roofline frac | what moves the dominant term |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    hints = {
+        "train": "less DUS/copy traffic: fused cache-free train step; bf16 moments; fewer remat reads",
+        "prefill": "fewer flash-pass temporaries; larger kv chunks; fused QKV",
+        "decode": "quantized (int8) KV cache; grouped multi-token decode to amortize weight reads",
+    }
+    out = []
+    for (arch, shape), r in cells.items():
+        if r["status"] != "ok":
+            continue
+        c = r["counters"]
+        rt = roofline_terms(c)
+        cfg = get_config(arch)
+        mf = model_flops(cfg, shape)
+        hlo_glob = c.get("flops", 0) * 256
+        ratio = mf / hlo_glob if hlo_glob else float("nan")
+        frac = (mf / 256 / PEAK_FLOPS) / rt["bound_s"] if rt["bound_s"] else 0.0
+        kind = ("train" if shape.startswith("train") else
+                "prefill" if shape.startswith("prefill") else "decode")
+        out.append((frac, f"| {arch} | {shape} | {rt['compute_s']:.3g} | "
+                    f"{rt['memory_s']:.3g} | {rt['collective_s']:.3g} | "
+                    f"{rt['dominant'].replace('_s', '')} | {ratio:.3f} | "
+                    f"{frac:.4f} | {hints[kind]} |"))
+    for _, row in sorted(out, reverse=True):
+        rows.append(row)
+    # skips
+    for (arch, shape), r in sorted(cells.items()):
+        if r["status"] == "skip":
+            rows.append(f"| {arch} | {shape} | — | — | — | — | — | SKIP | "
+                        f"{r['reason'][:70]} |")
+    return "\n".join(rows)
+
+
+def perf_table() -> str:
+    recs = load_jsonl("results/perf_iterations.jsonl", key=lambda r: r.get("tag"))
+    base = load_jsonl("results/roofline_raw.jsonl",
+                      key=lambda r: (r.get("arch"), r.get("shape")))
+    rows = ["| iteration | compute s | memory s | collective s | 6ND/HLO | verdict vs hypothesis |",
+            "|---|---|---|---|---|---|"]
+    for (arch, shape) in [("deepseek-67b", "train_4k"),
+                          ("qwen3-moe-30b-a3b", "train_4k"),
+                          ("hymba-1.5b", "long_500k")]:
+        b = base.get((arch, shape))
+        if b and b.get("roofline"):
+            rt = b["roofline"]
+            rows.append(f"| **{arch} × {shape} baseline** | {rt['compute_s']:.4g} | "
+                        f"{rt['memory_s']:.4g} | {rt['collective_s']:.4g} | "
+                        f"{b.get('useful_ratio', 0):.3f} | paper-faithful |")
+        for tag, r in sorted(recs.items()):
+            if r.get("arch") == arch and r.get("shape") == shape \
+                    and r.get("status") == "ok":
+                rt = r["roofline"]
+                rows.append(f"| {tag} | {rt['compute_s']:.4g} | {rt['memory_s']:.4g} | "
+                            f"{rt['collective_s']:.4g} | {r.get('useful_ratio', 0):.3f} | "
+                            f"see §Perf narrative |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("## Dry-run\n")
+        print(dryrun_table())
+    if which in ("roofline", "all"):
+        print("\n## Roofline\n")
+        print(roofline_table())
+    if which in ("perf", "all"):
+        print("\n## Perf\n")
+        print(perf_table())

@@ -1,0 +1,185 @@
+"""Jitted, sharded train/prefill/serve steps for any (arch, mesh).
+
+`make_*_step` returns the jitted function plus the in/out sharding pytrees
+(the dry-run lowers the same functions with ShapeDtypeStructs; real
+training calls them with live arrays — one code path for both).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.model import Model
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.sharding import (ShardingPlan, plan_batch, plan_caches,
+                            plan_opt_state, plan_params)
+
+from .mesh import batch_axes_of
+
+__all__ = ["StepBundle", "make_train_step", "make_prefill_step",
+           "make_serve_step", "make_plan"]
+
+
+@dataclass
+class StepBundle:
+    fn: object  # jitted step
+    in_shardings: tuple
+    out_shardings: object
+    plan: ShardingPlan
+
+
+def make_plan(mesh, **kw) -> ShardingPlan:
+    return ShardingPlan(mesh=mesh, batch_axes=batch_axes_of(mesh), **kw)
+
+
+def _mesh_info(cfg: ArchConfig, mesh, plan: ShardingPlan):
+    if cfg.is_moe and mesh is not None and "model" in mesh.axis_names \
+            and mesh.shape["model"] > 1 and cfg.num_experts % mesh.shape["model"] == 0:
+        return (mesh, plan.batch_axes)
+    return None
+
+
+def make_train_step(cfg: ArchConfig, mesh, opt: AdamWConfig | None = None,
+                    remat: bool = True, zero1: bool = True,
+                    kv_chunk: int = 1024,
+                    moment_dtype: str | None = None) -> StepBundle:
+    model = Model(cfg)
+    plan = make_plan(mesh)
+    opt = opt or AdamWConfig()
+    if moment_dtype is not None:
+        import dataclasses as _dc
+        opt = _dc.replace(opt, moment_dtype=moment_dtype)
+    minfo = _mesh_info(cfg, mesh, plan)
+
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = plan_params(plan, params_shape)
+    ospecs = {
+        "m": plan_opt_state(plan, params_shape, zero1),
+        "v": plan_opt_state(plan, params_shape, zero1),
+        "step": P(),
+    }
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, mesh_info=minfo, remat=remat,
+                                       kv_chunk=kv_chunk)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, stats = adamw_update(params, grads, opt_state, opt)
+        return new_params, new_opt, {"loss": loss, **metrics, **stats}
+
+    def batch_specs(batch):
+        return plan_batch(plan, batch)
+
+    ns = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    def jit_for(batch_tree):
+        bspecs = batch_specs(batch_tree)
+        return jax.jit(
+            train_step,
+            in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs)),
+            out_shardings=(ns(pspecs), ns(ospecs),
+                           ns(jax.tree.map(lambda _: P(), {
+                               "loss": 0, "ce": 0, "aux": 0,
+                               "grad_norm": 0, "lr": 0}))),
+            donate_argnums=(0, 1),
+        )
+
+    bundle = StepBundle(fn=None, in_shardings=(pspecs, ospecs), out_shardings=pspecs,
+                        plan=plan)
+    bundle.jit_for = jit_for  # shape-dependent jit builder
+    bundle.model = model
+    bundle.param_specs = pspecs
+    bundle.opt_specs = ospecs
+    bundle.init_opt = functools.partial(init_opt_state,
+                                        moment_dtype=opt.moment_dtype)
+    return bundle
+
+
+def make_prefill_step(cfg: ArchConfig, mesh, cache_len: int,
+                      kv_chunk: int = 1024,
+                      seq_parallel_decode: bool = True) -> StepBundle:
+    model = Model(cfg)
+    plan = make_plan(mesh, seq_parallel_decode=seq_parallel_decode)
+    minfo = _mesh_info(cfg, mesh, plan)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = plan_params(plan, params_shape)
+
+    def prefill_step(params, batch):
+        b, s = batch["tokens"].shape
+        caches = model.init_caches(b, cache_len)
+        logits, caches, _ = model.forward(
+            params, batch["tokens"], mode="prefill", caches=caches,
+            frontend=batch.get("frontend"), mesh_info=minfo, kv_chunk=kv_chunk)
+        return logits[:, -1:], caches
+
+    ns = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    def jit_for(batch_tree):
+        bspecs = plan_batch(plan, batch_tree)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_caches(batch_tree["tokens"].shape[0], cache_len))
+        cspecs = plan_caches(plan, cache_shape)
+        out_logits = P()
+        return jax.jit(prefill_step,
+                       in_shardings=(ns(pspecs), ns(bspecs)),
+                       out_shardings=(NamedSharding(mesh, out_logits), ns(cspecs)))
+
+    bundle = StepBundle(fn=None, in_shardings=(pspecs,), out_shardings=None,
+                        plan=plan)
+    bundle.jit_for = jit_for
+    bundle.model = model
+    bundle.param_specs = pspecs
+    return bundle
+
+
+def make_serve_step(cfg: ArchConfig, mesh, cache_len: int,
+                    kv_chunk: int = 1024,
+                    seq_parallel_decode: bool = True,
+                    shard_head_dim_fallback: bool = False) -> StepBundle:
+    """serve_step: one new token per sequence against the decode cache."""
+    model = Model(cfg)
+    plan = make_plan(mesh, seq_parallel_decode=seq_parallel_decode,
+                     shard_head_dim_fallback=shard_head_dim_fallback)
+    minfo = _mesh_info(cfg, mesh, plan)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = plan_params(plan, params_shape)
+
+    def serve_step(params, caches, tokens, positions):
+        logits, caches, _ = model.forward(
+            params, tokens, mode="decode", caches=caches, positions=positions,
+            mesh_info=minfo, kv_chunk=kv_chunk)
+        return logits, caches
+
+    ns = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    def jit_for(batch_size: int):
+        cache_shape = jax.eval_shape(lambda: model.init_caches(batch_size, cache_len))
+        cspecs = plan_caches(plan, cache_shape)
+        tok_spec = plan_batch(plan, {
+            "tokens": jax.ShapeDtypeStruct((batch_size, 1), jnp.int32)})["tokens"]
+        return jax.jit(serve_step,
+                       in_shardings=(ns(pspecs), ns(cspecs),
+                                     NamedSharding(mesh, tok_spec),
+                                     NamedSharding(mesh, tok_spec)),
+                       out_shardings=(NamedSharding(mesh, P()), ns(cspecs)),
+                       donate_argnums=(1,))  # caches update in place
+
+    bundle = StepBundle(fn=None, in_shardings=(pspecs,), out_shardings=None,
+                        plan=plan)
+    bundle.jit_for = jit_for
+    bundle.model = model
+    bundle.param_specs = pspecs
+    return bundle

@@ -1,0 +1,5 @@
+"""LM model zoo: the 10 assigned architectures as config-driven JAX models."""
+from .config import ArchConfig
+from .model import Model, build_model, init_params
+
+__all__ = ["ArchConfig", "Model", "build_model", "init_params"]

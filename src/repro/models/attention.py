@@ -1,0 +1,156 @@
+"""Attention: GQA / sliding-window / cross / decode, flash-style blockwise.
+
+One position-mask-driven implementation covers every flavor the assigned
+architectures need:
+  * causal full attention (train / prefill),
+  * grouped-query attention (no KV head repeat is materialized — the query
+    is reshaped to (B, S, KVH, G, hd) and contractions keep the group dim),
+  * sliding-window attention with an exact ring-buffer KV cache,
+  * bidirectional encoder and cross attention (causal=False),
+  * single-token decode against a KV cache.
+
+Softmax runs in fp32 with the online (running max / denominator) update,
+scanning over KV chunks so the score tensor never exceeds one
+(B, Sq, KVH, G, chunk) block — this is what keeps 32k prefill and 512k
+hybrid decode inside HBM.  Invalid cache slots carry position -1 and are
+masked out, so ragged lengths need no special casing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mha", "decode_attend", "init_kv_cache", "update_kv_cache"]
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int | None):
+    """(..., Sq, C) boolean validity from absolute positions.
+
+    q_pos: (B, Sq); k_pos: (B, C).  k_pos == -1 marks empty cache slots.
+    """
+    valid = (k_pos >= 0)[:, None, :]  # (B, 1, C)
+    if causal:
+        valid = valid & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window is not None:
+        valid = valid & (k_pos[:, None, :] > q_pos[:, :, None] - window)
+    return valid  # (B, Sq, C)
+
+
+def mha(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, KVH, hd)
+    v: jnp.ndarray,  # (B, Skv, KVH, hd)
+    q_pos: jnp.ndarray,  # (B, Sq) int32
+    k_pos: jnp.ndarray,  # (B, Skv) int32; -1 = invalid slot
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_chunk: int = 1024,
+    softmax_scale: float | None = None,
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = softmax_scale if softmax_scale is not None else hd**-0.5
+
+    chunk = min(kv_chunk, skv)
+    if skv % chunk:
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        skv += pad
+    nc = skv // chunk
+
+    qg = q.reshape(b, sq, kvh, g, hd)
+    kc = k.reshape(b, nc, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def step(carry, inputs):
+        m, l, acc = carry  # (B,Sq,KVH,G), (B,Sq,KVH,G), (B,Sq,KVH,G,hd) fp32
+        k_i, v_i, p_i = inputs  # (B,C,KVH,hd), (B,C,KVH,hd), (B,C)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k_i,
+                       preferred_element_type=jnp.float32) * scale
+        ok = _mask(q_pos, p_i, causal, window)  # (B,Sq,C)
+        s = jnp.where(ok[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    from .layers import scan_unroll
+    m0 = jnp.full((b, sq, kvh, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc),
+                                  unroll=scan_unroll())
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def decode_attend(
+    q: jnp.ndarray,  # (B, 1, H, hd)
+    k_cache: jnp.ndarray,  # (B, S, KVH, hd)
+    v_cache: jnp.ndarray,
+    cache_pos: jnp.ndarray,  # (B, S) int32 absolute positions, -1 = empty
+    q_pos: jnp.ndarray,  # (B, 1)
+    *,
+    window: int | None = None,
+    softmax_scale: float | None = None,
+) -> jnp.ndarray:
+    """Single-token decode: one fused pass (no chunk scan needed at Sq=1)."""
+    b, _, h, hd = q.shape
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    scale = softmax_scale if softmax_scale is not None else hd**-0.5
+    qg = q.reshape(b, 1, kvh, g, hd)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    ok = _mask(q_pos, cache_pos, True, window)
+    s = jnp.where(ok[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def init_kv_cache(batch: int, length: int, kvh: int, hd: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, length, kvh, hd), dtype),
+        "v": jnp.zeros((batch, length, kvh, hd), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def update_kv_cache(cache: dict, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                    positions: jnp.ndarray) -> dict:
+    """Write new K/V at their positions, modulo the cache length.
+
+    Full caches (length >= max position) see the identity mapping; shorter
+    (sliding-window) caches behave as ring buffers.  If more tokens arrive
+    than the cache holds (SWA prefill), only the trailing `length` tokens
+    are written so the newest entries deterministically win.
+
+    k_new/v_new: (B, S_new, KVH, hd); positions: (B, S_new).
+    """
+    length = cache["k"].shape[1]
+    s_new = k_new.shape[1]
+    if s_new > length:
+        k_new = k_new[:, -length:]
+        v_new = v_new[:, -length:]
+        positions = positions[:, -length:]
+    slots = positions % length
+    b_idx = jnp.arange(k_new.shape[0])[:, None]
+    k = cache["k"].at[b_idx, slots].set(k_new)
+    v = cache["v"].at[b_idx, slots].set(v_new)
+    pos = cache["pos"].at[b_idx, slots].set(positions)
+    return {"k": k, "v": v, "pos": pos}

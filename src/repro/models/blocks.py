@@ -1,0 +1,240 @@
+"""Decoder/encoder blocks: one parameterized implementation per family.
+
+Every block is a pure function (params, x, ...) -> (x, cache) with a
+static `mode` in {"train", "prefill", "decode"}:
+  * train   — full sequence, no cache emitted (memory-lean for grad).
+  * prefill — full sequence, emits the cache decode will consume.
+  * decode  — single token against the cache.
+
+Blocks are written to be scanned over stacked (L, ...) parameters; any
+per-layer heterogeneity (e.g. Hymba's 3 global-attention layers inside an
+SWA stack) is expressed through *traced* per-layer scalars so one compiled
+body serves the whole stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .attention import decode_attend, init_kv_cache, mha, update_kv_cache
+from .layers import rms_norm, apply_rope, swiglu
+from .mamba2 import init_mamba_cache, mamba_block, mamba_decode
+from .mla import init_mla_cache, mla_attention, mla_decode
+from .moe import moe_ffn, moe_ffn_sharded
+
+__all__ = ["self_attention", "attn_mlp_block", "moe_block", "ssm_block",
+           "hybrid_block", "cross_block", "enc_dec_block", "encoder_block",
+           "cross_kv", "init_block_cache"]
+
+BIG_WINDOW = jnp.int32(2**30)
+
+
+# ---------------------------------------------------------------- attention
+
+def _qkv(p: dict, x: jnp.ndarray, positions: jnp.ndarray, cfg):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def self_attention(
+    p: dict, x: jnp.ndarray, positions: jnp.ndarray, cfg, mode: str,
+    cache: dict | None = None, window=None, kv_chunk: int = 1024,
+):
+    """Returns (attn_out, cache_out). `window` may be a traced scalar."""
+    q, k, v = _qkv(p, x, positions, cfg)
+    if mode == "decode":
+        cache = update_kv_cache(cache, k, v, positions)
+        out = decode_attend(q, cache["k"], cache["v"], cache["pos"], positions,
+                            window=window)
+    else:
+        out = mha(q, k, v, positions, positions, causal=True, window=window,
+                  kv_chunk=kv_chunk)
+        if mode == "prefill":
+            cache = update_kv_cache(cache, k, v, positions)
+    # Tag the post-all-reduce activation: under the "save_collectives"
+    # remat policy the bwd pass reuses it instead of re-running the TP
+    # collective (EXPERIMENTS.md §Perf).
+    proj = checkpoint_name(jnp.einsum("bshe,hed->bsd", out, p["wo"]),
+                           "tp_collective_out")
+    return proj, cache
+
+
+# ------------------------------------------------------------- block bodies
+
+def attn_mlp_block(p, x, positions, cfg, mode, cache=None, window=None,
+                   kv_chunk: int = 1024):
+    """Pre-norm attention + SwiGLU MLP (llama family)."""
+    if cfg.use_mla:
+        h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        if mode == "decode":
+            attn, cache = mla_decode(p["attn"], h, cache, positions, cfg)
+        else:
+            attn, new_cache = mla_attention(p["attn"], h, positions, cfg, kv_chunk)
+            if mode == "prefill":
+                from .mla import update_mla_cache
+                cache = update_mla_cache(cache, new_cache["c_kv"],
+                                         new_cache["k_pe"], positions)
+    else:
+        attn, cache = self_attention(p["attn"], rms_norm(x, p["attn_norm"], cfg.norm_eps),
+                                     positions, cfg, mode, cache, window, kv_chunk)
+    x = x + attn
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + checkpoint_name(
+        swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"]),
+        "tp_collective_out")
+    return x, cache
+
+
+def moe_block(p, x, positions, cfg, mode, cache=None, mesh_info=None,
+              kv_chunk: int = 1024):
+    """Attention (GQA or MLA) + routed-experts FFN (+ shared experts)."""
+    if cfg.use_mla:
+        h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+        if mode == "decode":
+            attn, cache = mla_decode(p["attn"], h, cache, positions, cfg)
+        else:
+            attn, new_cache = mla_attention(p["attn"], h, positions, cfg, kv_chunk)
+            if mode == "prefill":
+                from .mla import update_mla_cache
+                cache = update_mla_cache(cache, new_cache["c_kv"],
+                                         new_cache["k_pe"], positions)
+    else:
+        attn, cache = self_attention(p["attn"], rms_norm(x, p["attn_norm"], cfg.norm_eps),
+                                     positions, cfg, mode, cache, None, kv_chunk)
+    x = x + attn
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if mesh_info is not None:
+        mesh, batch_axes = mesh_info
+        routed, aux = moe_ffn_sharded(h, p["moe"], cfg, mesh, batch_axes)
+    else:
+        routed, aux = moe_ffn(h, p["moe"], cfg.top_k, cfg.capacity_factor)
+    out = routed
+    if cfg.num_shared_experts:
+        out = out + swiglu(h, p["shared"]["w_gate"], p["shared"]["w_up"],
+                           p["shared"]["w_down"])
+    out = checkpoint_name(out, "tp_collective_out")
+    return x + out, cache, aux
+
+
+def ssm_block(p, x, positions, cfg, mode, cache=None):
+    """Pure Mamba-2 block (mamba2-780m): norm -> mixer -> residual."""
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    if mode == "decode":
+        out, cache = mamba_decode(p["mamba"], h, cfg, cache)
+    else:
+        out, new_cache = mamba_block(p["mamba"], h, cfg)
+        if mode == "prefill":
+            cache = new_cache
+    return x + out, cache
+
+
+def hybrid_block(p, x, positions, cfg, mode, cache=None, window=None,
+                 kv_chunk: int = 1024):
+    """Hymba: attention and Mamba-2 heads in parallel on the same input,
+    outputs normalized and averaged, then a SwiGLU MLP."""
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    attn_cache = cache["attn"] if cache is not None else None
+    ssm_cache = cache["ssm"] if cache is not None else None
+    attn, attn_cache = self_attention(p["attn"], h, positions, cfg, mode,
+                                      attn_cache, window, kv_chunk)
+    if mode == "decode":
+        ssm, ssm_cache = mamba_decode(p["mamba"], h, cfg, ssm_cache)
+    else:
+        ssm, new_ssm = mamba_block(p["mamba"], h, cfg)
+        if mode == "prefill":
+            ssm_cache = new_ssm
+    mixed = 0.5 * (rms_norm(attn, p["attn_out_norm"], cfg.norm_eps)
+                   + rms_norm(ssm, p["ssm_out_norm"], cfg.norm_eps))
+    x = x + checkpoint_name(mixed, "tp_collective_out")
+    h2 = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + checkpoint_name(
+        swiglu(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"]),
+        "tp_collective_out")
+    cache = {"attn": attn_cache, "ssm": ssm_cache} if mode != "train" else None
+    return x, cache
+
+
+def cross_block(p, x, enc_kv: dict, cfg, mode):
+    """Cross-attention + MLP (vlm image layers, whisper decoder cross part).
+
+    enc_kv: {"k": (B,Se,KVH,hd), "v": ..., "pos": (B,Se)} — precomputed from
+    encoder states (static during decode).
+    """
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", h, p["attn"]["wq"])
+    out = mha(q, enc_kv["k"], enc_kv["v"],
+              jnp.zeros(q.shape[:2], jnp.int32), enc_kv["pos"],
+              causal=False, kv_chunk=1024)
+    attn = jnp.einsum("bshe,hed->bsd", out, p["attn"]["wo"])
+    # Gated residual (llama-3.2 style tanh gate, initialized near zero).
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * attn
+    h2 = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * swiglu(
+        h2, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x
+
+
+def enc_dec_block(p, x, positions, enc_kv: dict, cfg, mode: str,
+                  cache: dict | None = None, kv_chunk: int = 1024):
+    """Whisper decoder layer: causal self-attn + cross-attn + MLP."""
+    attn, cache = self_attention(p["self_attn"],
+                                 rms_norm(x, p["self_norm"], cfg.norm_eps),
+                                 positions, cfg, mode, cache, None, kv_chunk)
+    x = x + attn
+    h = rms_norm(x, p["cross_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bshe", h, p["cross_attn"]["wq"])
+    out = mha(q, enc_kv["k"], enc_kv["v"],
+              jnp.zeros(q.shape[:2], jnp.int32), enc_kv["pos"],
+              causal=False, kv_chunk=kv_chunk)
+    x = x + jnp.einsum("bshe,hed->bsd", out, p["cross_attn"]["wo"])
+    h2 = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + swiglu(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x, cache
+
+
+def encoder_block(p, x, positions, cfg, kv_chunk: int = 1024):
+    """Bidirectional self-attention + MLP (whisper encoder)."""
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(p["attn"], h, positions, cfg)
+    out = mha(q, k, v, positions, positions, causal=False, kv_chunk=kv_chunk)
+    x = x + jnp.einsum("bshe,hed->bsd", out, p["attn"]["wo"])
+    h2 = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    x = x + swiglu(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x
+
+
+def cross_kv(attn_p: dict, enc_states: jnp.ndarray, cfg) -> dict:
+    """Precompute cross-attention K/V from encoder states."""
+    k = jnp.einsum("bsd,dhe->bshe", enc_states, attn_p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", enc_states, attn_p["wv"])
+    pos = jnp.broadcast_to(jnp.arange(enc_states.shape[1], dtype=jnp.int32),
+                           enc_states.shape[:2])
+    return {"k": k, "v": v, "pos": pos}
+
+
+# ---------------------------------------------------------------- caches
+
+def init_block_cache(cfg, kind: str, batch: int, cache_len: int, dtype,
+                     window_len: int | None = None):
+    """Cache pytree for one layer of the given kind."""
+    if kind == "mla":
+        return init_mla_cache(batch, cache_len, cfg, dtype)
+    if kind == "attn":
+        length = window_len if window_len is not None else cache_len
+        return init_kv_cache(batch, length, cfg.num_kv_heads, cfg.head_dim, dtype)
+    if kind == "ssm":
+        return init_mamba_cache(batch, cfg, dtype)
+    if kind == "hybrid":
+        length = window_len if window_len is not None else cache_len
+        return {"attn": init_kv_cache(batch, length, cfg.num_kv_heads,
+                                      cfg.head_dim, dtype),
+                "ssm": init_mamba_cache(batch, cfg, dtype)}
+    raise ValueError(kind)

@@ -1,0 +1,210 @@
+"""Parameter initialization: per-block init fns + stacked (vmapped) layers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import DTYPES, init_dense
+
+__all__ = ["init_params"]
+
+
+def _attn_init(key, cfg: ArchConfig, dt):
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(k1, (d, h, hd), dt, fan_in=d),
+        "wk": init_dense(k2, (d, kvh, hd), dt, fan_in=d),
+        "wv": init_dense(k3, (d, kvh, hd), dt, fan_in=d),
+        "wo": init_dense(k4, (h, hd, d), dt, fan_in=h * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _mla_init(key, cfg: ArchConfig, dt):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    r, rh = cfg.kv_lora_rank, cfg.rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_q": init_dense(ks[0], (d, h, hd + rh), dt, fan_in=d),
+        "w_dkv": init_dense(ks[1], (d, r), dt, fan_in=d),
+        "w_kpe": init_dense(ks[2], (d, rh), dt, fan_in=d),
+        "w_uk": init_dense(ks[3], (r, h, hd), dt, fan_in=r),
+        "w_uv": init_dense(ks[4], (r, h, hd), dt, fan_in=r),
+        "w_o": init_dense(ks[5], (h, hd, d), dt, fan_in=h * hd),
+    }
+
+
+def _mlp_init(key, d: int, f: int, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, (d, f), dt),
+        "w_up": init_dense(k2, (d, f), dt),
+        "w_down": init_dense(k3, (f, d), dt),
+    }
+
+
+def _moe_init(key, cfg: ArchConfig, dt):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": init_dense(k1, (d, e), jnp.float32),
+        "w_gate": init_dense(k2, (e, d, f), dt, fan_in=d),
+        "w_up": init_dense(k3, (e, d, f), dt, fan_in=d),
+        "w_down": init_dense(k4, (e, f, d), dt, fan_in=f),
+    }
+
+
+def _mamba_init(key, cfg: ArchConfig, dt):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": init_dense(k1, (d, 2 * di + 2 * n + h), dt, fan_in=d),
+        "conv_w": init_dense(k2, (cfg.conv_kernel, di + 2 * n), dt, fan_in=cfg.conv_kernel),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": init_dense(k3, (di, d), dt, fan_in=di),
+    }
+
+
+def _norm(d, dt):
+    return jnp.ones((d,), dt)
+
+
+def _dense_block_init(key, cfg: ArchConfig, dt):
+    k1, k2 = jax.random.split(key)
+    attn = _mla_init(k1, cfg, dt) if cfg.use_mla else _attn_init(k1, cfg, dt)
+    return {
+        "attn": attn,
+        "mlp": _mlp_init(k2, cfg.d_model, cfg.d_ff, dt),
+        "attn_norm": _norm(cfg.d_model, dt),
+        "mlp_norm": _norm(cfg.d_model, dt),
+    }
+
+
+def _moe_block_init(key, cfg: ArchConfig, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    attn = _mla_init(k1, cfg, dt) if cfg.use_mla else _attn_init(k1, cfg, dt)
+    p = {
+        "attn": attn,
+        "moe": _moe_init(k2, cfg, dt),
+        "attn_norm": _norm(cfg.d_model, dt),
+        "mlp_norm": _norm(cfg.d_model, dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = _mlp_init(k3, cfg.d_model,
+                                cfg.moe_d_ff * cfg.num_shared_experts, dt)
+    return p
+
+
+def _ssm_block_init(key, cfg: ArchConfig, dt):
+    return {
+        "mamba": _mamba_init(key, cfg, dt),
+        "pre_norm": _norm(cfg.d_model, dt),
+    }
+
+
+def _hybrid_block_init(key, cfg: ArchConfig, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn": _attn_init(k1, cfg, dt),
+        "mamba": _mamba_init(k2, cfg, dt),
+        "mlp": _mlp_init(k3, cfg.d_model, cfg.d_ff, dt),
+        "attn_norm": _norm(cfg.d_model, dt),
+        "attn_out_norm": _norm(cfg.d_model, dt),
+        "ssm_out_norm": _norm(cfg.d_model, dt),
+        "mlp_norm": _norm(cfg.d_model, dt),
+    }
+
+
+def _cross_block_init(key, cfg: ArchConfig, dt):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": _attn_init(k1, cfg, dt),
+        "mlp": _mlp_init(k2, cfg.d_model, cfg.d_ff, dt),
+        "attn_norm": _norm(cfg.d_model, dt),
+        "mlp_norm": _norm(cfg.d_model, dt),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def _enc_dec_block_init(key, cfg: ArchConfig, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_attn": _attn_init(k1, cfg, dt),
+        "cross_attn": _attn_init(k2, cfg, dt),
+        "mlp": _mlp_init(k3, cfg.d_model, cfg.d_ff, dt),
+        "self_norm": _norm(cfg.d_model, dt),
+        "cross_norm": _norm(cfg.d_model, dt),
+        "mlp_norm": _norm(cfg.d_model, dt),
+    }
+
+
+def _encoder_block_init(key, cfg: ArchConfig, dt):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": _attn_init(k1, cfg, dt),
+        "mlp": _mlp_init(k2, cfg.d_model, cfg.d_ff, dt),
+        "attn_norm": _norm(cfg.d_model, dt),
+        "mlp_norm": _norm(cfg.d_model, dt),
+    }
+
+
+def _stack(fn, key, n: int, *args):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: fn(k, *args))(keys)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    dt = DTYPES[cfg.param_dtype]
+    kemb, khead, kblocks, kenc = jax.random.split(key, 4)
+    params: dict = {
+        "embed": init_dense(kemb, (cfg.vocab_size, cfg.d_model), dt, fan_in=cfg.d_model),
+        "final_norm": _norm(cfg.d_model, dt),
+        "lm_head": init_dense(khead, (cfg.d_model, cfg.vocab_size), dt),
+    }
+    fam = cfg.family
+    if fam == "dense":
+        params["layers"] = _stack(_dense_block_init, kblocks, cfg.num_layers, cfg, dt)
+    elif fam == "moe":
+        k1, k2 = jax.random.split(kblocks)
+        n_moe = cfg.num_layers - cfg.first_dense_layers
+        params["layers"] = _stack(_moe_block_init, k1, n_moe, cfg, dt)
+        if cfg.first_dense_layers:
+            params["dense0"] = _stack(_dense_block_init, k2,
+                                      cfg.first_dense_layers, cfg, dt)
+    elif fam == "ssm":
+        params["layers"] = _stack(_ssm_block_init, kblocks, cfg.num_layers, cfg, dt)
+    elif fam == "hybrid":
+        k1, k2 = jax.random.split(kblocks)
+        n_glob = len(cfg.global_attn_layers)
+        params["swa"] = _stack(_hybrid_block_init, k1, cfg.num_layers - n_glob, cfg, dt)
+        params["global"] = _stack(_hybrid_block_init, k2, n_glob, cfg, dt)
+    elif fam == "vlm":
+        k1, k2 = jax.random.split(kblocks)
+        n_cross = cfg.num_layers // (cfg.cross_attn_every + 1)
+        n_self = cfg.num_layers - n_cross
+        per = cfg.cross_attn_every
+        groups = n_self // per
+        assert groups == n_cross, (n_self, n_cross, per)
+        # Nested stack: (groups, per, ...) for self layers, (groups, ...) cross.
+        params["self"] = _stack(
+            lambda k, c, d: _stack(_dense_block_init, k, per, c, d), k1, groups, cfg, dt)
+        params["cross"] = _stack(_cross_block_init, k2, groups, cfg, dt)
+    elif fam == "audio":
+        k1, k2, k3 = jax.random.split(kblocks, 3)
+        params["encoder"] = _stack(_encoder_block_init, k1, cfg.encoder_layers, cfg, dt)
+        params["enc_norm"] = _norm(cfg.d_model, dt)
+        params["layers"] = _stack(_enc_dec_block_init, k2, cfg.num_layers, cfg, dt)
+        if cfg.frontend_dim and cfg.frontend_dim != cfg.d_model:
+            params["frontend_proj"] = init_dense(k3, (cfg.frontend_dim, cfg.d_model), dt)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params

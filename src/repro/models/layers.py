@@ -1,0 +1,84 @@
+"""Shared building blocks: norms, rotary embeddings, SwiGLU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "rope_freqs", "apply_rope", "swiglu", "init_dense",
+           "cross_entropy_loss", "DTYPES", "set_scan_unroll", "scan_unroll"]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}
+
+# Roofline-measurement switch: XLA cost analysis visits a while-loop body
+# once, so FLOP / collective-byte measurement needs every lax.scan unrolled.
+# Training/serving always run rolled (flag False).
+_SCAN_UNROLL = False
+
+
+def set_scan_unroll(flag: bool) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = bool(flag)
+
+
+def scan_unroll():
+    """Value to pass as lax.scan(..., unroll=...)."""
+    return True if _SCAN_UNROLL else 1
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm in fp32 accumulation, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim // 2,) inverse frequencies."""
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate (..., seq, heads, head_dim) by position; fp32 math.
+
+    positions: (..., seq) int32 — absolute token positions.
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, hd/2) broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., : hd // 2].astype(jnp.float32)
+    x2 = x[..., hd // 2 :].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: silu(x @ w_gate) * (x @ w_up) @ w_down."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def init_dense(key: jax.Array, shape: tuple[int, ...], dtype,
+               fan_in: int | None = None):
+    """Truncated-normal fan-in init (fan_in defaults to the leading dim)."""
+    if fan_in is None:
+        fan_in = shape[0] if len(shape) >= 2 else 1
+    std = fan_in**-0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token cross entropy in fp32. logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

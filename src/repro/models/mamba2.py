@@ -1,0 +1,196 @@
+"""Mamba-2 (SSD, state-space duality) block: chunked train scan + O(1) decode.
+
+Chunked SSD (arXiv:2405.21060 §6): the sequence is split into chunks of Q
+tokens; within a chunk the contribution is a small attention-like quadratic
+form (MXU-friendly), across chunks a single `lax.scan` carries the
+(H, N, P) state.  Decode keeps a constant-size state — this is why the ssm
+and hybrid architectures are the ones that run the long_500k shape.
+
+Layout: x (B, S, H, P) head-split inner activations, B/C (B, S, N) with a
+single B/C group, dt (B, S, H), A (H,) negative reals.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+__all__ = ["ssd_scan", "ssd_decode_step", "mamba_block", "mamba_decode",
+           "init_mamba_cache"]
+
+
+def _segsum(dA: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum_{j<k<=i} dA[k].
+
+    dA: (..., Q); returns (..., Q, Q) with -inf above the diagonal.
+    """
+    q = dA.shape[-1]
+    cum = jnp.cumsum(dA, axis=-1)
+    # out[i, j] = cum[i] - cum[j] (sum over k in (j, i]); mask j > i.
+    out = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) post-softplus
+    a: jnp.ndarray,  # (H,) negative
+    b_in: jnp.ndarray,  # (B, S, N)
+    c_in: jnp.ndarray,  # (B, S, N)
+    chunk: int,
+    init_state: jnp.ndarray | None = None,  # (B, H, N, P)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,N,P)). fp32 internals."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # Trailing pad: dt=0 => decay 1 and zero state contribution, so
+        # causal outputs for the real positions are unaffected.
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = b_in.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cf = c_in.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    dA = dtf * a  # (B,nc,Q,H)
+
+    # Intra-chunk (diagonal) term: attention-like with decay kernel L.
+    seg = _segsum(dA.transpose(0, 1, 3, 2))  # (B,nc,H,Q,Q)
+    ldecay = jnp.exp(seg)
+    scores = jnp.einsum("bcin,bcjn->bcij", cf, bf)  # (B,nc,Q,Q)
+    xdt = xf * dtf[..., None]  # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, ldecay, xdt)
+
+    # Per-chunk end states: sum_j B_j decay(end, j) xdt_j.
+    cum = jnp.cumsum(dA, axis=2)  # (B,nc,Q,H)
+    total = cum[:, :, -1:, :]  # (B,nc,1,H)
+    decay_to_end = jnp.exp(total - cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bf, decay_to_end, xdt)
+
+    # Inter-chunk recurrence.
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # (B,nc,H)
+    s0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_in = carry  # (B,H,N,P)
+        dec, st_chunk = inp  # (B,H), (B,H,N,P)
+        st_out = st_in * dec[..., None, None] + st_chunk
+        return st_out, st_in  # emit the state *entering* the chunk
+
+    from .layers import scan_unroll
+    dec_t = chunk_decay.transpose(1, 0, 2)  # (nc,B,H)
+    st_t = states.transpose(1, 0, 2, 3, 4)  # (nc,B,H,N,P)
+    final, entering = jax.lax.scan(step, s0, (dec_t, st_t), unroll=scan_unroll())
+    entering = entering.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+
+    # Off-diagonal term: state entering the chunk read out at each position.
+    decay_from_start = jnp.exp(cum)  # (B,nc,Q,H)
+    y_off = jnp.einsum("bcin,bcih,bchnp->bcihp", cf, decay_from_start, entering)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,  # (B, 1, H, P)
+    dt: jnp.ndarray,  # (B, 1, H)
+    a: jnp.ndarray,  # (H,)
+    b_in: jnp.ndarray,  # (B, 1, N)
+    c_in: jnp.ndarray,  # (B, 1, N)
+    state: jnp.ndarray,  # (B, H, N, P) fp32
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x[:, 0].astype(jnp.float32)  # (B,H,P)
+    dtf = dt[:, 0].astype(jnp.float32)  # (B,H)
+    bf = b_in[:, 0].astype(jnp.float32)  # (B,N)
+    cf = c_in[:, 0].astype(jnp.float32)
+    dA = jnp.exp(dtf * a)  # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", bf, dtf, xf)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cf, state)
+    return y[:, None].astype(x.dtype), state
+
+
+def _split_proj(z: jnp.ndarray, cfg):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zs = jnp.split(z, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    gate, xs, b_in, c_in, dt = zs
+    return gate, xs, b_in, c_in, dt
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, cache: jnp.ndarray | None):
+    """Depthwise causal conv1d. u: (B, S, C); w: (K, C).
+
+    Returns (out (B,S,C), new_cache (B, K-1, C)).
+    """
+    k = w.shape[0]
+    if cache is None:
+        cache = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([cache, u], axis=1)  # (B, S+K-1, C)
+    out = sum(ext[:, i : i + u.shape[1]] * w[i] for i in range(k))
+    new_cache = ext[:, -(k - 1):] if k > 1 else cache
+    return jax.nn.silu(out), new_cache
+
+
+def mamba_block(
+    p: dict, x: jnp.ndarray, cfg,
+    init_state: jnp.ndarray | None = None,
+    conv_cache: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Full Mamba-2 mixer over a sequence. x: (B, S, D)."""
+    b, s, _ = x.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    gate, xs, b_in, c_in, dt = _split_proj(z, cfg)
+    conv_in = jnp.concatenate([xs, b_in, c_in], axis=-1)
+    conv_out, conv_cache = _causal_conv(conv_in, p["conv_w"], conv_cache)
+    xs, b_in, c_in = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, s, h, pdim)
+    y, state = ssd_scan(xh, dt, a, b_in, c_in, cfg.ssm_chunk, init_state)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(gate), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y.reshape(-1, cfg.d_inner), p["out_proj"])
+    return out.reshape(b, s, -1), {"state": state, "conv": conv_cache}
+
+
+def mamba_decode(
+    p: dict, x: jnp.ndarray, cfg, cache: dict,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-token decode. x: (B, 1, D); cache {state, conv}."""
+    b = x.shape[0]
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    gate, xs, b_in, c_in, dt = _split_proj(z, cfg)
+    conv_in = jnp.concatenate([xs, b_in, c_in], axis=-1)
+    conv_out, conv_cache = _causal_conv(conv_in, p["conv_w"], cache["conv"])
+    xs, b_in, c_in = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, 1, h, pdim)
+    y, state = ssd_decode_step(xh, dt, a, b_in, c_in, cache["state"])
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(gate), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"state": state, "conv": conv_cache}
+
+
+def init_mamba_cache(batch: int, cfg, dtype) -> dict:
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }

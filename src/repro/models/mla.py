@@ -1,0 +1,118 @@
+"""Multi-head Latent Attention (DeepSeek-V2), prefill + absorbed decode.
+
+K/V are compressed into a rank-`kv_lora_rank` latent c_kv plus one shared
+decoupled rope sub-head k_pe; the cache stores only (c_kv, k_pe) — the MLA
+memory saving.  Decode uses the weight-absorption identity:
+
+  score = (q_nope W_uk^T) . c_kv + q_pe . k_pe
+  out   = (softmax . c_kv) W_uv
+
+so the per-head K/V are never materialized during decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import mha
+from .layers import apply_rope
+
+__all__ = ["mla_attention", "mla_decode", "init_mla_cache", "update_mla_cache"]
+
+NEG_INF = -1e30
+
+
+def _project_q(p: dict, x: jnp.ndarray, positions: jnp.ndarray, cfg):
+    """Returns q_nope (B,S,H,hd), q_pe (B,S,H,rh) with rope applied."""
+    q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])  # e = hd + rh
+    q_nope = q[..., : cfg.head_dim]
+    q_pe = apply_rope(q[..., cfg.head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_attention(
+    p: dict,
+    x: jnp.ndarray,  # (B, S, D)
+    positions: jnp.ndarray,  # (B, S)
+    cfg,
+    kv_chunk: int = 1024,
+) -> tuple[jnp.ndarray, dict]:
+    """Prefill/train path: materializes per-head K/V from the latent.
+
+    Returns (attn_out (B,S,D), cache{c_kv, k_pe, pos}).
+    """
+    b, s, _ = x.shape
+    h, hd, rh = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q_nope, q_pe = _project_q(p, x, positions, cfg)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])  # (B,S,r)
+    k_pe = apply_rope(jnp.einsum("bsd,de->bse", x, p["w_kpe"])[:, :, None, :],
+                      positions, cfg.rope_theta)[:, :, 0]  # (B,S,rh)
+
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"])  # (B,S,H,hd)
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"])  # (B,S,H,hd)
+
+    # Assemble full q/k with the shared rope sub-head broadcast to all heads.
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)  # (B,S,H,hd+rh)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, rh))], axis=-1
+    )
+    scale = (hd + rh) ** -0.5
+    # v is padded to hd+rh so mha's uniform head_dim applies; excess sliced off.
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, rh)))
+    out = mha(q_full, k_full, v_pad, positions, positions, causal=True,
+              kv_chunk=kv_chunk, softmax_scale=scale)[..., :hd]
+    from jax.ad_checkpoint import checkpoint_name
+    attn = checkpoint_name(jnp.einsum("bshe,hed->bsd", out, p["w_o"]),
+                           "tp_collective_out")
+    cache = {"c_kv": c_kv, "k_pe": k_pe, "pos": positions}
+    return attn, cache
+
+
+def mla_decode(
+    p: dict,
+    x: jnp.ndarray,  # (B, 1, D)
+    cache: dict,  # c_kv (B,S,r), k_pe (B,S,rh), pos (B,S)
+    positions: jnp.ndarray,  # (B, 1)
+    cfg,
+) -> tuple[jnp.ndarray, dict]:
+    """Absorbed decode: attention in latent space, O(r) per cached token."""
+    h, hd, rh = cfg.num_heads, cfg.head_dim, cfg.rope_head_dim
+    q_nope, q_pe = _project_q(p, x, positions, cfg)  # (B,1,H,hd), (B,1,H,rh)
+
+    c_new = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])  # (B,1,r)
+    kpe_new = apply_rope(jnp.einsum("bsd,de->bse", x, p["w_kpe"])[:, :, None, :],
+                         positions, cfg.rope_theta)[:, :, 0]
+    cache = update_mla_cache(cache, c_new, kpe_new, positions)
+
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"])  # absorb W_uk
+    s_lat = jnp.einsum("bshr,bcr->bshc", q_lat, cache["c_kv"],
+                       preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bshe,bce->bshc", q_pe, cache["k_pe"],
+                      preferred_element_type=jnp.float32)
+    s = (s_lat + s_pe) * (hd + rh) ** -0.5  # (B,1,H,C)
+    valid = (cache["pos"] >= 0) & (cache["pos"] <= positions)  # (B,C); positions (B,1) bcasts
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bshc,bcr->bshr", w.astype(cache["c_kv"].dtype), cache["c_kv"],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshr,rhe->bshe", out_lat, p["w_uv"])  # (B,1,H,hd)
+    attn = jnp.einsum("bshe,hed->bsd", out, p["w_o"])
+    return attn, cache
+
+
+def init_mla_cache(batch: int, length: int, cfg, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, length, cfg.rope_head_dim), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def update_mla_cache(cache: dict, c_new, kpe_new, positions) -> dict:
+    b_idx = jnp.arange(c_new.shape[0])[:, None]
+    return {
+        "c_kv": cache["c_kv"].at[b_idx, positions].set(c_new),
+        "k_pe": cache["k_pe"].at[b_idx, positions].set(kpe_new),
+        "pos": cache["pos"].at[b_idx, positions].set(positions),
+    }

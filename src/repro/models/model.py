@@ -1,0 +1,349 @@
+"""Model assembly: ArchConfig -> init / train / prefill / decode.
+
+Layer stacks are scanned over stacked (L, ...) parameters so the HLO (and
+hence SPMD-partitioning and compile time) is independent of depth; any
+heterogeneity is expressed as segment schedules over sliced stacks
+(Hymba's global layers, DSv2's leading dense layer, the VLM's interleaved
+cross-attention groups, whisper's encoder/decoder split).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (attn_mlp_block, cross_block, cross_kv, enc_dec_block,
+                     encoder_block, hybrid_block, init_block_cache, moe_block,
+                     ssm_block)
+from .config import ArchConfig
+from .layers import DTYPES, cross_entropy_loss, rms_norm
+from .init import init_params
+
+__all__ = ["Model", "build_model", "init_params"]
+
+
+def _slice_tree(tree, i0, i1):
+    return jax.tree.map(lambda a: a[i0:i1], tree)
+
+
+def _index_tree(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _stack_cache(single, n: int):
+    return jax.tree.map(lambda a: jnp.repeat(a[None], n, axis=0), single)
+
+
+def set_scan_unroll(flag: bool) -> None:
+    from .layers import set_scan_unroll as _set
+    _set(flag)
+
+
+def _remat_policy(name: str):
+    if name == "save_collectives":
+        # Keep the tagged post-all-reduce block outputs; the bwd pass then
+        # never re-runs the TP collectives (EXPERIMENTS.md §Perf).
+        return jax.checkpoint_policies.save_only_these_names("tp_collective_out")
+    return None  # "full": recompute everything
+
+
+def _scan(body, x, stacked, caches, remat: bool, policy_name: str = "full"):
+    """Scan `body(x, p_i, c_i) -> (x, c_i', aux_i)` over stacked layers."""
+    from .layers import scan_unroll
+
+    def f(carry, xs):
+        h, aux = carry
+        p_i, c_i = xs
+        h, c_new, a = body(h, p_i, c_i)
+        return (h, aux + a), c_new
+
+    if remat:
+        f = jax.checkpoint(f, prevent_cse=False, policy=_remat_policy(policy_name))
+    (x, aux), new_caches = jax.lax.scan(f, (x, jnp.float32(0.0)), (stacked, caches),
+                                        unroll=scan_unroll())
+    return x, new_caches, aux
+
+
+class Model:
+    """Functional model bundle for one architecture config."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def init(self, key: jax.Array) -> dict:
+        return init_params(self.cfg, key)
+
+    # ------------------------------------------------------------- caches
+    def init_caches(self, batch: int, cache_len: int) -> Any:
+        cfg = self.cfg
+        dt = DTYPES[cfg.activation_dtype]
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            kind = "mla" if cfg.use_mla else "attn"
+            single = init_block_cache(cfg, kind, batch, cache_len, dt)
+            caches = {"layers": _stack_cache(single, cfg.num_layers - cfg.first_dense_layers)}
+            if cfg.first_dense_layers:
+                caches["dense0"] = _stack_cache(single, cfg.first_dense_layers)
+            return caches
+        if fam == "ssm":
+            single = init_block_cache(cfg, "ssm", batch, cache_len, dt)
+            return {"layers": _stack_cache(single, cfg.num_layers)}
+        if fam == "hybrid":
+            n_glob = len(cfg.global_attn_layers)
+            swa = init_block_cache(cfg, "hybrid", batch, cache_len, dt,
+                                   window_len=min(cfg.sliding_window, cache_len))
+            glob = init_block_cache(cfg, "hybrid", batch, cache_len, dt)
+            return {"swa": _stack_cache(swa, cfg.num_layers - n_glob),
+                    "global": _stack_cache(glob, n_glob)}
+        if fam == "vlm":
+            per = cfg.cross_attn_every
+            groups = cfg.num_layers // (per + 1)
+            single = init_block_cache(cfg, "attn", batch, cache_len, dt)
+            ck = {
+                "k": jnp.zeros((groups, batch, cfg.frontend_seq, cfg.num_kv_heads,
+                                cfg.head_dim), dt),
+                "v": jnp.zeros((groups, batch, cfg.frontend_seq, cfg.num_kv_heads,
+                                cfg.head_dim), dt),
+                "pos": jnp.full((groups, batch, cfg.frontend_seq), -1, jnp.int32),
+            }
+            return {"self": _stack_cache(_stack_cache(single, per), groups),
+                    "cross_kv": ck}
+        if fam == "audio":
+            single = init_block_cache(cfg, "attn", batch, cache_len, dt)
+            ck = {
+                "k": jnp.zeros((cfg.num_layers, batch, cfg.frontend_seq,
+                                cfg.num_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((cfg.num_layers, batch, cfg.frontend_seq,
+                                cfg.num_kv_heads, cfg.head_dim), dt),
+                "pos": jnp.full((cfg.num_layers, batch, cfg.frontend_seq), -1,
+                                jnp.int32),
+            }
+            return {"layers": _stack_cache(single, cfg.num_layers), "cross": ck}
+        raise ValueError(fam)
+
+    # ------------------------------------------------------------ forward
+    def forward(
+        self,
+        params: dict,
+        tokens: jnp.ndarray,  # (B, S)
+        *,
+        mode: str = "train",
+        caches: Any = None,
+        positions: jnp.ndarray | None = None,
+        frontend: jnp.ndarray | None = None,  # (B, Sf, Df) stub embeddings
+        mesh_info=None,
+        remat: bool = False,
+        kv_chunk: int = 1024,
+    ):
+        """Returns (logits, caches, aux_loss)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = params["embed"][tokens]
+        fam = cfg.family
+
+        if fam in ("dense", "moe"):
+            x, caches, aux = self._fwd_decoder(params, x, positions, mode,
+                                               caches, mesh_info, remat, kv_chunk)
+        elif fam == "ssm":
+            def body(h, p_i, c_i):
+                h, c = ssm_block(p_i, h, positions, cfg, mode, c_i)
+                return h, c, jnp.float32(0.0)
+            lcaches = caches["layers"] if caches is not None else None
+            x, lcaches, aux = _scan(body, x, params["layers"], lcaches, remat,
+                                    self.cfg.remat_policy)
+            caches = {"layers": lcaches} if lcaches is not None else None
+        elif fam == "hybrid":
+            x, caches, aux = self._fwd_hybrid(params, x, positions, mode,
+                                              caches, remat, kv_chunk)
+        elif fam == "vlm":
+            x, caches, aux = self._fwd_vlm(params, x, positions, mode, caches,
+                                           frontend, remat, kv_chunk)
+        elif fam == "audio":
+            x, caches, aux = self._fwd_audio(params, x, positions, mode, caches,
+                                             frontend, remat, kv_chunk)
+        else:
+            raise ValueError(fam)
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+        return logits, caches, aux
+
+    # ------------------------------------------------- family sub-forwards
+    def _fwd_decoder(self, params, x, positions, mode, caches, mesh_info,
+                     remat, kv_chunk):
+        cfg = self.cfg
+        aux_total = jnp.float32(0.0)
+        if cfg.first_dense_layers:
+            d0 = caches["dense0"] if caches is not None else None
+            for i in range(cfg.first_dense_layers):
+                c_i = _index_tree(d0, i) if d0 is not None else None
+                x, c_new = attn_mlp_block(_index_tree(params["dense0"], i), x,
+                                          positions, cfg, mode, c_i,
+                                          kv_chunk=kv_chunk)
+                if d0 is not None:
+                    d0 = jax.tree.map(lambda full, new, ii=i: full.at[ii].set(new),
+                                      d0, c_new)
+        if cfg.is_moe:
+            def body(h, p_i, c_i):
+                h, c, aux = moe_block(p_i, h, positions, cfg, mode, c_i,
+                                      mesh_info, kv_chunk)
+                return h, c, aux
+        else:
+            def body(h, p_i, c_i):
+                h, c = attn_mlp_block(p_i, h, positions, cfg, mode, c_i,
+                                      window=cfg.sliding_window, kv_chunk=kv_chunk)
+                return h, c, jnp.float32(0.0)
+        lcaches = caches["layers"] if caches is not None else None
+        x, lcaches, aux = _scan(body, x, params["layers"], lcaches, remat,
+                                cfg.remat_policy)
+        aux_total = aux_total + aux
+        if caches is not None:
+            caches = dict(caches, layers=lcaches)
+            if cfg.first_dense_layers:
+                caches["dense0"] = d0
+        return x, caches, aux_total
+
+    def _fwd_hybrid(self, params, x, positions, mode, caches, remat, kv_chunk):
+        cfg = self.cfg
+        glob = sorted(cfg.global_attn_layers)
+        n_layers = cfg.num_layers
+        swa_c = caches["swa"] if caches is not None else None
+        glob_c = caches["global"] if caches is not None else None
+
+        def swa_body(h, p_i, c_i):
+            h, c = hybrid_block(p_i, h, positions, cfg, mode, c_i,
+                                window=cfg.sliding_window, kv_chunk=kv_chunk)
+            return h, c, jnp.float32(0.0)
+
+        swa_idx = 0
+        new_swa, new_glob = [], []
+        layer = 0
+        for gi, gpos in enumerate(glob + [n_layers]):
+            n_swa_seg = gpos - layer
+            if n_swa_seg > 0:
+                seg_p = _slice_tree(params["swa"], swa_idx, swa_idx + n_swa_seg)
+                seg_c = (_slice_tree(swa_c, swa_idx, swa_idx + n_swa_seg)
+                         if swa_c is not None else None)
+                x, seg_c_new, _ = _scan(swa_body, x, seg_p, seg_c, remat,
+                                        cfg.remat_policy)
+                if seg_c_new is not None:
+                    new_swa.append(seg_c_new)
+                swa_idx += n_swa_seg
+                layer = gpos
+            if gpos < n_layers:
+                c_i = _index_tree(glob_c, gi) if glob_c is not None else None
+                x, c_new = hybrid_block(_index_tree(params["global"], gi), x,
+                                        positions, cfg, mode, c_i, window=None,
+                                        kv_chunk=kv_chunk)
+                if c_new is not None:
+                    new_glob.append(c_new)
+                layer = gpos + 1
+        if caches is not None:
+            swa_out = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_swa) \
+                if len(new_swa) > 1 else (new_swa[0] if new_swa else None)
+            glob_out = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_glob) \
+                if new_glob else None
+            caches = {"swa": swa_out, "global": glob_out}
+        return x, caches, jnp.float32(0.0)
+
+    def _fwd_vlm(self, params, x, positions, mode, caches, frontend, remat,
+                 kv_chunk):
+        cfg = self.cfg
+        per = cfg.cross_attn_every
+
+        def self_body(h, p_i, c_i):
+            h, c = attn_mlp_block(p_i, h, positions, cfg, mode, c_i,
+                                  kv_chunk=kv_chunk)
+            return h, c, jnp.float32(0.0)
+
+        def group_body(h, gp_self, gp_cross, gc_self, gc_cross_kv):
+            h, c_self, _ = _scan(self_body, h, gp_self, gc_self, remat,
+                                 cfg.remat_policy)
+            if mode == "decode":
+                enc_kv = gc_cross_kv
+            else:
+                enc_kv = cross_kv(gp_cross["attn"], frontend, cfg)
+            h = cross_block(gp_cross, h, enc_kv, cfg, mode)
+            # Only persist cross K/V when building a decode cache.
+            return h, c_self, (enc_kv if mode != "train" else None)
+
+        def f(carry, xs):
+            h = carry
+            gp_self, gp_cross, gc_self, gc_ckv = xs
+            h, c_self, enc_kv = group_body(h, gp_self, gp_cross, gc_self, gc_ckv)
+            return h, (c_self, enc_kv)
+
+        gc_self = caches["self"] if caches is not None else None
+        gc_ckv = caches["cross_kv"] if caches is not None else None
+        from .layers import scan_unroll
+        x, (new_self, new_ckv) = jax.lax.scan(
+            f, x, (params["self"], params["cross"], gc_self, gc_ckv),
+            unroll=scan_unroll())
+        if caches is not None:
+            caches = {"self": new_self, "cross_kv": new_ckv}
+        return x, caches, jnp.float32(0.0)
+
+    def _fwd_audio(self, params, x, positions, mode, caches, frontend, remat,
+                   kv_chunk):
+        cfg = self.cfg
+        if mode == "decode":
+            enc_states = None  # cross K/V comes from the cache
+        else:
+            enc = frontend
+            if "frontend_proj" in params:
+                enc = jnp.einsum("bsd,de->bse", enc, params["frontend_proj"])
+            enc_pos = jnp.broadcast_to(
+                jnp.arange(enc.shape[1], dtype=jnp.int32), enc.shape[:2])
+
+            def enc_body(h, p_i, c_i):
+                return encoder_block(p_i, h, enc_pos, cfg, kv_chunk), None, jnp.float32(0.0)
+
+            enc_states, _, _ = _scan(enc_body, enc, params["encoder"], None,
+                                     remat, cfg.remat_policy)
+            enc_states = rms_norm(enc_states, params["enc_norm"], cfg.norm_eps)
+
+        def dec_body(h, xs_i):
+            p_i, c_i, ckv_i = xs_i
+            if mode == "decode":
+                enc_kv = ckv_i
+            else:
+                enc_kv = cross_kv(p_i["cross_attn"], enc_states, cfg)
+            h, c = enc_dec_block(p_i, h, positions, enc_kv, cfg, mode, c_i,
+                                 kv_chunk)
+            return h, (c, enc_kv if mode != "train" else None)
+
+        def f(carry, xs):
+            h = carry
+            h, out = dec_body(h, xs)
+            return h, out
+
+        lcaches = caches["layers"] if caches is not None else None
+        ckv = caches["cross"] if caches is not None else None
+        from .layers import scan_unroll
+        x, (new_caches, new_ckv) = jax.lax.scan(
+            f, x, (params["layers"], lcaches, ckv),
+            unroll=scan_unroll())
+        if caches is not None:
+            caches = {"layers": new_caches, "cross": new_ckv}
+        return x, caches, jnp.float32(0.0)
+
+    # --------------------------------------------------------------- loss
+    def loss(self, params, batch, *, mesh_info=None, remat: bool = False,
+             kv_chunk: int = 1024, aux_weight: float = 0.01):
+        logits, _, aux = self.forward(
+            params, batch["tokens"], mode="train",
+            frontend=batch.get("frontend"), mesh_info=mesh_info, remat=remat,
+            kv_chunk=kv_chunk)
+        if "labels" in batch:
+            ce = cross_entropy_loss(logits, batch["labels"])
+        else:  # next-token prediction: shift by one
+            ce = cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,16 @@
+"""Trace-driven NoC simulator substrate (the toolchain's evaluation phase).
+
+A Noxim++ substitute at the abstraction the paper measures: XY
+deterministic routing on a W x H 2D mesh, per-link bandwidth limits per
+cycle, per-core injection limits (a crossbar sends at most `capacity`
+spikes per time step), and the four paper metrics — average spike latency,
+dynamic energy, congestion count (Eq. 3) and edge variance (Eq. 4-5).
+"""
+from .energy import EnergyModel
+from .sim import NoCStats, simulate_noc
+from .xy import link_count, link_ids_for_routes, route_hops
+
+__all__ = [
+    "EnergyModel", "NoCStats", "simulate_noc",
+    "link_count", "link_ids_for_routes", "route_hops",
+]

@@ -1,0 +1,24 @@
+"""Dynamic-energy model for spike traversal on the NoC.
+
+The paper evaluates *dynamic* energy only (static energy is constant for a
+fixed mesh, §5.3.2).  Dynamic energy is proportional to spike-hops: every
+hop costs one router traversal plus one inter-router link traversal.
+Constants are representative 32 nm figures (ORION-class); all paper
+comparisons are ratios, so the absolute scale cancels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["EnergyModel"]
+
+
+@dataclass(frozen=True)
+class EnergyModel:
+    router_pj_per_spike: float = 0.98  # switch + arbitration per hop
+    link_pj_per_spike: float = 0.34  # wire traversal per hop
+    local_pj_per_spike: float = 0.10  # core-local delivery (no NoC hop)
+
+    def dynamic_energy_pj(self, total_hops: int, local_spikes: int = 0) -> float:
+        per_hop = self.router_pj_per_spike + self.link_pj_per_spike
+        return float(total_hops) * per_hop + float(local_spikes) * self.local_pj_per_spike

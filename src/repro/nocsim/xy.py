@@ -1,0 +1,105 @@
+"""XY dimension-order routing on a W x H 2D mesh — link indexing helpers.
+
+Directed link id layout (total ``link_count(W, H)`` links):
+  * East  (x,y)->(x+1,y): id =                        y*(W-1) + x
+  * West  (x,y)->(x-1,y): id = (W-1)*H              + y*(W-1) + (x-1)
+  * South (x,y)->(x,y+1): id = 2*(W-1)*H            + x*(H-1) + y
+  * North (x,y)->(x,y-1): id = 2*(W-1)*H + W*(H-1)  + x*(H-1) + (y-1)
+
+XY routing resolves X first, then Y — deadlock-free and static, which is
+what makes the paper's analytic hop evaluation (and this module's fully
+vectorized route expansion) possible.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["link_count", "route_hops", "next_link", "link_ids_for_routes"]
+
+
+def link_count(w: int, h: int) -> int:
+    return 2 * (w - 1) * h + 2 * w * (h - 1)
+
+
+def route_hops(src: np.ndarray, dst: np.ndarray, w: int) -> np.ndarray:
+    sx, sy = src % w, src // w
+    dx, dy = dst % w, dst // w
+    return np.abs(sx - dx) + np.abs(sy - dy)
+
+
+def next_link(cur: np.ndarray, dst: np.ndarray, w: int, h: int) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized single XY step: returns (next_core, link_id).
+
+    Entries with cur == dst return (cur, -1).
+    """
+    cx, cy = cur % w, cur // w
+    dx, dy = dst % w, dst // w
+    e_base = 0
+    w_base = (w - 1) * h
+    s_base = 2 * (w - 1) * h
+    n_base = s_base + w * (h - 1)
+
+    go_e = cx < dx
+    go_w = cx > dx
+    go_s = (cx == dx) & (cy < dy)
+    go_n = (cx == dx) & (cy > dy)
+
+    nxt = cur.copy()
+    link = np.full(cur.shape, -1, dtype=np.int64)
+    nxt = np.where(go_e, cur + 1, nxt)
+    link = np.where(go_e, e_base + cy * (w - 1) + cx, link)
+    nxt = np.where(go_w, cur - 1, nxt)
+    link = np.where(go_w, w_base + cy * (w - 1) + (cx - 1), link)
+    nxt = np.where(go_s, cur + w, nxt)
+    link = np.where(go_s, s_base + cx * (h - 1) + cy, link)
+    nxt = np.where(go_n, cur - w, nxt)
+    link = np.where(go_n, n_base + cx * (h - 1) + (cy - 1), link)
+    return nxt, link
+
+
+def link_ids_for_routes(
+    src: np.ndarray, dst: np.ndarray, w: int, h: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Expand each (src, dst) pair's full XY route into directed link ids.
+
+    Returns (link_ids, packet_index) — flat arrays, one entry per traversal.
+    Exploits the fact that an XY route is at most two *consecutive* runs of
+    link ids under the layout above.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    sx, sy = src % w, src // w
+    dx, dy = dst % w, dst // w
+    w_base = (w - 1) * h
+    s_base = 2 * (w - 1) * h
+    n_base = s_base + w * (h - 1)
+
+    # Horizontal run (at row sy).
+    east = dx > sx
+    west = dx < sx
+    h_len = np.abs(dx - sx)
+    h_start = np.where(
+        east, sy * (w - 1) + sx,  # E ids x = sx .. dx-1
+        np.where(west, w_base + sy * (w - 1) + dx, 0),  # W ids (x-1) = dx .. sx-1
+    )
+    # Vertical run (at column dx).
+    south = dy > sy
+    north = dy < sy
+    v_len = np.abs(dy - sy)
+    v_start = np.where(
+        south, s_base + dx * (h - 1) + sy,  # S ids y = sy .. dy-1
+        np.where(north, n_base + dx * (h - 1) + dy, 0),  # N ids (y-1) = dy .. sy-1
+    )
+
+    def expand(starts: np.ndarray, lens: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        total = int(lens.sum())
+        if total == 0:
+            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+        pkt = np.repeat(np.arange(lens.shape[0]), lens)
+        cum = np.concatenate([[0], np.cumsum(lens)])
+        within = np.arange(total) - np.repeat(cum[:-1], lens)
+        return np.repeat(starts, lens) + within, pkt
+
+    h_ids, h_pkt = expand(h_start, h_len)
+    v_ids, v_pkt = expand(v_start, v_len)
+    return np.concatenate([h_ids, v_ids]), np.concatenate([h_pkt, v_pkt])

@@ -1,0 +1,107 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, and optional
+int8 gradient compression (stochastic rounding) for the cross-replica
+reduce — pure pytree implementation, no optax dependency.
+
+Optimizer moments are kept in fp32 regardless of parameter dtype; the
+sharding planner places them with ZeRO-1 data-axis sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "compress_grads"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    clip_norm: float = 1.0
+    compress_int8: bool = False
+    # "float32" (default, exact) or "bfloat16": halves optimizer HBM traffic
+    # and footprint; update math still runs in fp32 (§Perf lever A3/B3).
+    moment_dtype: str = "float32"
+
+
+def init_opt_state(params, moment_dtype: str = "float32") -> dict:
+    dt = jnp.bfloat16 if moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(step, cfg: AdamWConfig):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def compress_grads(grads, key):
+    """Simulated int8 all-reduce compression: per-tensor absmax scaling with
+    stochastic rounding, quantize -> dequantize.  On hardware the int8
+    tensors ride the wire (4x fewer gradient bytes on the data axis); the
+    numerics here are bit-identical to that path."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+
+    def q(g, k):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        scaled = g32 / scale
+        noise = jax.random.uniform(k, g.shape, jnp.float32) - 0.5
+        q8 = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+        return q8.astype(jnp.float32) * scale
+
+    return jax.tree.unflatten(treedef, [q(g, k) for g, k in zip(leaves, keys)])
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    # Global-norm clip in fp32.
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = _schedule(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m_new.astype(m.dtype), v_new.astype(v.dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr,
+    }

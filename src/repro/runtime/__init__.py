@@ -1,0 +1,5 @@
+from .checkpoint import CheckpointManager
+from .elastic import remesh_params
+from .health import HeartbeatMonitor
+
+__all__ = ["CheckpointManager", "remesh_params", "HeartbeatMonitor"]

@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing: atomic, step-tagged, resumable.
+
+Layout:
+  <dir>/step_000123/arrays.npz     flattened pytree ('/'-joined key paths)
+  <dir>/step_000123/manifest.json  step, treedef repr, dtype/shape index
+  <dir>/LATEST                     committed step number (written last)
+
+Writes go to step_*.tmp and are renamed into place before LATEST is
+updated, so a host failure mid-write can never corrupt the restore path —
+restore always reads the last committed step.  Old steps are pruned with
+`keep` retention.  A background-thread `save_async` overlaps the host-side
+serialization with the next training step (the device->host copy is the
+only synchronous part).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+            for e in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._write_lock = threading.Lock()  # serialize sync vs async writers
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree) -> Path:
+        host_tree = jax.tree.map(np.asarray, tree)  # device -> host sync
+        return self._write(step, host_tree)
+
+    def save_async(self, step: int, tree) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)
+        self.wait()
+        self._thread = threading.Thread(target=self._write, args=(step, host_tree))
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree) -> Path:
+        with self._write_lock:
+            return self._write_locked(step, host_tree)
+
+    def _write_locked(self, step: int, host_tree) -> Path:
+        final = self.dir / f"step_{step:09d}"
+        tmp = self.dir / f"step_{step:09d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(host_tree)
+        np.savez(tmp / "arrays.npz", **flat)
+        manifest = {
+            "step": step,
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic commit of the step directory
+        latest_tmp = self.dir / "LATEST.tmp"
+        latest_tmp.write_text(str(step))
+        os.replace(latest_tmp, self.dir / "LATEST")  # atomic pointer flip
+        self._prune()
+        return final
+
+    def _prune(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                if not p.name.endswith(".tmp")]
+
+    def latest_step(self) -> int | None:
+        marker = self.dir / "LATEST"
+        if not marker.exists():
+            return None
+        step = int(marker.read_text().strip())
+        return step if (self.dir / f"step_{step:09d}").exists() else None
+
+    def restore(self, template, step: int | None = None):
+        """Restore into the structure (and shardings) of `template`."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        z = np.load(self.dir / f"step_{step:09d}" / "arrays.npz")
+        flat_template, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in flat_template:
+            key = "/".join(
+                str(getattr(e, "key", getattr(e, "idx", getattr(e, "name", e))))
+                for e in path)
+            arr = z[key]
+            if hasattr(leaf, "sharding"):
+                arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), step

@@ -1,0 +1,31 @@
+"""Elastic scaling: rebuild the mesh after pod/node loss and reshard state.
+
+Recovery path on a real cluster: (1) surviving hosts agree on the new
+device set, (2) `make_production_mesh` is rebuilt at the reduced pod
+count, (3) the sharding planner re-plans on the new mesh (divisibility
+rules may change — e.g. the batch divisor halves when a pod drops), and
+(4) parameters/optimizer state are re-placed, either from the live copies
+(`remesh_params`) or from the last committed checkpoint
+(`CheckpointManager.restore` with the new plan's template).  Data shards
+are re-balanced by re-deriving `DataConfig.num_shards` from the new mesh —
+the pipeline's (seed, step, shard) determinism makes this a pure re-index.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+__all__ = ["remesh_params"]
+
+
+def remesh_params(tree, new_mesh: Mesh, new_specs):
+    """Re-place a pytree onto a new mesh under new PartitionSpecs.
+
+    Works on live arrays (device-to-device where possible) — the in-memory
+    half of elastic recovery.  Values are preserved exactly; only the
+    placement changes.
+    """
+    def place(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(place, tree, new_specs)

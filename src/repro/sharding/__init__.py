@@ -1,0 +1,6 @@
+from .planner import (ShardingPlan, plan_params, plan_caches, plan_batch,
+                      plan_opt_state, spec_for_param)
+from .layout import sneap_device_layout
+
+__all__ = ["ShardingPlan", "plan_params", "plan_caches", "plan_batch",
+           "plan_opt_state", "spec_for_param", "sneap_device_layout"]

@@ -1,0 +1,312 @@
+"""Rule-based sharding planner: param/cache/batch pytrees -> PartitionSpecs.
+
+Rules are keyed on parameter names and *negative* dimension indices, so the
+same rule applies whether a leaf is a single layer or carries one or two
+leading stack dims from scan-over-layers.  Every rule is guarded by a
+divisibility check against the mesh axis size — a dimension that does not
+divide evenly falls back to replication and the drop is recorded in the
+plan (`plan.notes`) rather than failing at compile time (e.g. GQA kv=5
+heads on a 16-way model axis).
+
+Layout convention (Megatron-style TP over the `model` axis, DP over
+`data`/`pod`):
+  * embedding / lm_head: vocab-parallel,
+  * attention q/k/v/o: head-parallel,
+  * MLP gate/up/down: ffn-parallel,
+  * MoE experts: expert-parallel (E dim),
+  * SSD in/out projections: inner-dim-parallel,
+  * optimizer m/v: parameter sharding + ZeRO-1 over the data axes on the
+    first still-replicated divisible dim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingPlan", "plan_params", "plan_caches", "plan_batch",
+           "plan_opt_state", "spec_for_param"]
+
+
+# (name, neg_dim) -> shard over model axis.  None neg_dim = replicate.
+_PARAM_RULES: list[tuple[str, int | None]] = [
+    ("embed", -2),
+    ("lm_head", -1),
+    ("frontend_proj", -1),
+    ("wq", -2), ("wk", -2), ("wv", -2), ("wo", -3),
+    ("w_q", -2), ("w_uk", -2), ("w_uv", -2), ("w_o", -3),
+    ("w_dkv", None), ("w_kpe", None),
+    ("router", None),
+    ("in_proj", -1), ("out_proj", -2),
+    ("conv_w", None), ("dt_bias", None), ("a_log", None), ("d_skip", None),
+    ("gate_attn", None), ("gate_mlp", None),
+]
+_MOE_RULES = {"w_gate": -3, "w_up": -3, "w_down": -3}
+_MLP_RULES = {"w_gate": -1, "w_up": -1, "w_down": -2}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return names
+
+
+@dataclass
+class ShardingPlan:
+    mesh: Mesh
+    model_axis: str = "model"
+    batch_axes: tuple[str, ...] = ("data",)
+    # Spread a batch-unshardable decode cache's sequence dim over the idle
+    # batch axes too ("sequence-parallel decode", §Perf). False = the
+    # paper-faithful baseline layout (model axis only).
+    seq_parallel_decode: bool = True
+    # When an attention projection's head count does not divide the model
+    # axis (Hymba's 25 heads, GQA kv=5), shard its head_dim instead of
+    # replicating — weight reads drop model-axis-fold at the cost of extra
+    # rope/attention resharding collectives (§Perf lever C2).
+    shard_head_dim_fallback: bool = False
+    notes: list[str] = field(default_factory=list)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    @property
+    def batch_size_divisor(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
+
+
+def _shard_dim(plan: ShardingPlan, shape, neg_dim: int | None, axis: str,
+               name: str) -> P:
+    if neg_dim is None:
+        return P()
+    ndim = len(shape)
+    spec = [None] * ndim
+    dim = ndim + neg_dim
+    if 0 <= dim < ndim:
+        if shape[dim] % plan.mesh.shape[axis] == 0:
+            spec[dim] = axis
+        else:
+            plan.notes.append(
+                f"{name}: dim {dim} size {shape[dim]} !% {axis}"
+                f"({plan.mesh.shape[axis]}) -> replicated")
+            return P()
+    return P(*spec)
+
+
+def spec_for_param(plan: ShardingPlan, path, leaf) -> P:
+    names = _path_names(path)
+    leaf_name = names[-1] if names else ""
+    under_moe = "moe" in names
+    shape = leaf.shape
+    if leaf_name in _MOE_RULES and under_moe:
+        return _shard_dim(plan, shape, _MOE_RULES[leaf_name], plan.model_axis,
+                          "/".join(names))
+    if leaf_name in _MLP_RULES and not under_moe:
+        return _shard_dim(plan, shape, _MLP_RULES[leaf_name], plan.model_axis,
+                          "/".join(names))
+    for rule_name, neg_dim in _PARAM_RULES:
+        if leaf_name == rule_name:
+            spec = _shard_dim(plan, shape, neg_dim, plan.model_axis,
+                              "/".join(names))
+            if (spec == P() and plan.shard_head_dim_fallback
+                    and leaf_name in ("wq", "wk", "wv", "wo", "w_q", "w_uk",
+                                      "w_uv", "w_o")):
+                hd_dim = -1 if leaf_name != "wo" and leaf_name != "w_o" else -2
+                spec = _shard_dim(plan, shape, hd_dim, plan.model_axis,
+                                  "/".join(names) + "(hd-fallback)")
+            return spec
+    # norms, scales, biases and anything unrecognized: replicate.
+    return P()
+
+
+def plan_params(plan: ShardingPlan, params: Any) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(plan, path, leaf), params)
+
+
+# --------------------------------------------------------------- caches
+
+def _batch_entry(plan: ShardingPlan):
+    return plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+
+
+def _spec_with(ndim: int, assigns: dict[int, Any]) -> P:
+    spec: list = [None] * ndim
+    for dim, ax in assigns.items():
+        if 0 <= dim < ndim:
+            spec[dim] = ax
+    return P(*spec)
+
+
+def _kv_group_specs(plan: ShardingPlan, group: dict, names) -> dict:
+    """Joint strategy for a {k, v, pos} KV-cache group.
+
+    Prefer sharding KV heads over the model axis (no extra collectives in
+    attention); when head count does not divide (GQA kv < model size),
+    shard the SEQUENCE dim instead — decode softmax then reduces over a
+    sharded axis and GSPMD inserts the small (B, H) partial-softmax
+    all-reduces, trading tiny collectives for a 16x cache-memory cut.
+
+    When the batch itself cannot shard (long-context decode at batch=1),
+    the otherwise-idle batch axes join the sequence sharding — the
+    "sequence-parallel decode" layout that spreads one sequence's cache
+    and attention FLOPs across the whole pod (EXPERIMENTS.md §Perf).
+    """
+    k = group["k"]
+    msize = plan.mesh.shape[plan.model_axis]
+    ndim = k.ndim
+    kvh_dim, seq_dim = ndim - 2, ndim - 3
+    div = plan.batch_size_divisor
+    batch_ok = k.shape[ndim - 4] % div == 0
+    if not batch_ok:
+        plan.notes.append(f"cache {'/'.join(names)}: batch {k.shape[ndim-4]} !% {div}")
+    # Sequence sharding axes: model alone, or everything when batch idles.
+    seq_axes = (plan.model_axis,) if (batch_ok or not plan.seq_parallel_decode) \
+        else tuple(plan.batch_axes) + (plan.model_axis,)
+    seq_div = int(np.prod([plan.mesh.shape[a] for a in seq_axes]))
+    seq_entry = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+
+    if batch_ok and k.shape[kvh_dim] % msize == 0:
+        kv_model = {kvh_dim: plan.model_axis}
+        mode = "heads"
+    elif k.shape[seq_dim] % seq_div == 0:
+        kv_model = {seq_dim: seq_entry}
+        mode = "seq"
+    elif k.shape[kvh_dim] % msize == 0:
+        kv_model = {kvh_dim: plan.model_axis}
+        mode = "heads"
+    else:
+        kv_model = {}
+        mode = "replicated"
+        plan.notes.append(f"cache {'/'.join(names)}: kv heads {k.shape[kvh_dim]}"
+                          f" and seq {k.shape[seq_dim]} unshardable")
+    out = {}
+    for name in ("k", "v"):
+        assigns = dict(kv_model)
+        if batch_ok:
+            assigns[ndim - 4] = _batch_entry(plan)
+        out[name] = _spec_with(ndim, assigns)
+    pos_ndim = group["pos"].ndim
+    pos_assigns = {}
+    if batch_ok:
+        pos_assigns[pos_ndim - 2] = _batch_entry(plan)
+    if mode == "seq":
+        pos_assigns[pos_ndim - 1] = seq_entry
+    out["pos"] = _spec_with(pos_ndim, pos_assigns)
+    return out
+
+
+def _mla_group_specs(plan: ShardingPlan, group: dict, names) -> dict:
+    """{c_kv, k_pe, pos}: latent has no head dim; shard the sequence dim."""
+    c = group["c_kv"]
+    msize = plan.mesh.shape[plan.model_axis]
+    div = plan.batch_size_divisor
+    ndim = c.ndim
+    seq_ok = c.shape[ndim - 2] % msize == 0
+    batch_ok = c.shape[ndim - 3] % div == 0
+    out = {}
+    for name in ("c_kv", "k_pe"):
+        assigns = {}
+        if batch_ok:
+            assigns[ndim - 3] = _batch_entry(plan)
+        if seq_ok:
+            assigns[ndim - 2] = plan.model_axis
+        out[name] = _spec_with(ndim, assigns)
+    pos_ndim = group["pos"].ndim
+    pos_assigns = {}
+    if batch_ok:
+        pos_assigns[pos_ndim - 2] = _batch_entry(plan)
+    if seq_ok:
+        pos_assigns[pos_ndim - 1] = plan.model_axis
+    out["pos"] = _spec_with(pos_ndim, pos_assigns)
+    return out
+
+
+def _ssm_specs(plan: ShardingPlan, leaf, name: str) -> P:
+    msize = plan.mesh.shape[plan.model_axis]
+    div = plan.batch_size_divisor
+    ndim = leaf.ndim
+    if name == "state":  # (..., B, H, N, P)
+        assigns = {}
+        if leaf.shape[ndim - 4] % div == 0:
+            assigns[ndim - 4] = _batch_entry(plan)
+        if leaf.shape[ndim - 3] % msize == 0:
+            assigns[ndim - 3] = plan.model_axis
+        return _spec_with(ndim, assigns)
+    if name == "conv":  # (..., B, K-1, C)
+        assigns = {}
+        if leaf.shape[ndim - 3] % div == 0:
+            assigns[ndim - 3] = _batch_entry(plan)
+        if leaf.shape[ndim - 1] % msize == 0:
+            assigns[ndim - 1] = plan.model_axis
+        return _spec_with(ndim, assigns)
+    return P()
+
+
+def plan_caches(plan: ShardingPlan, caches: Any) -> Any:
+    """Walk the cache pytree, handling {k,v,pos} / {c_kv,k_pe,pos} groups
+    jointly so every member of a group gets a consistent layout."""
+
+    def walk(node, names):
+        if isinstance(node, dict):
+            keys = set(node.keys())
+            if {"k", "v", "pos"} <= keys:
+                specs = _kv_group_specs(plan, node, names)
+                return {kk: (specs[kk] if kk in specs else walk(vv, names + [kk]))
+                        for kk, vv in node.items()}
+            if {"c_kv", "k_pe", "pos"} <= keys:
+                specs = _mla_group_specs(plan, node, names)
+                return {kk: (specs[kk] if kk in specs else walk(vv, names + [kk]))
+                        for kk, vv in node.items()}
+            out = {}
+            for kk, vv in node.items():
+                if kk in ("state", "conv") and hasattr(vv, "ndim"):
+                    out[kk] = _ssm_specs(plan, vv, kk)
+                else:
+                    out[kk] = walk(vv, names + [kk])
+            return out
+        if hasattr(node, "ndim"):
+            return P()
+        return jax.tree.map(lambda _: P(), node)
+
+    return walk(caches, [])
+
+
+def plan_batch(plan: ShardingPlan, batch: Any) -> Any:
+    def one(path, leaf):
+        div = plan.batch_size_divisor
+        axes = plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+        if leaf.shape and leaf.shape[0] % div == 0:
+            return P(*([axes] + [None] * (leaf.ndim - 1)))
+        plan.notes.append(
+            f"batch {'/'.join(_path_names(path))}: {leaf.shape} !% {div} -> replicated")
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+# ----------------------------------------------------------- optimizer
+
+def plan_opt_state(plan: ShardingPlan, params: Any, zero1: bool = True) -> Any:
+    """Adam m/v: parameter spec + ZeRO-1 data-sharding of the first free dim."""
+    pspecs = plan_params(plan, params)
+
+    def one(leaf, spec: P):
+        if not zero1 or leaf.ndim == 0:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        div = plan.batch_size_divisor
+        for d in range(leaf.ndim):
+            if entries[d] is None and leaf.shape[d] % div == 0 and leaf.shape[d] >= div:
+                entries[d] = plan.batch_axes if len(plan.batch_axes) > 1 \
+                    else plan.batch_axes[0]
+                break
+        return P(*entries)
+
+    return jax.tree.map(one, params, pspecs)

@@ -1,0 +1,96 @@
+"""Leaky integrate-and-fire dynamics, vectorized over neurons and time.
+
+The event-driven loop of CARLsim becomes a dense time-stepped
+``jax.lax.scan`` over a (T, N) spike raster.  The membrane update itself
+(decay + integrate + threshold + reset) is the per-step compute hot spot
+of the profiling phase; ``repro.kernels.lif_step`` provides the Pallas TPU
+kernel for it and this module is wired to use either implementation.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LIFParams", "lif_step_jnp", "lif_run"]
+
+
+@dataclass(frozen=True)
+class LIFParams:
+    """Discrete-time LIF constants (per-network, scalar-broadcast)."""
+
+    decay: float = 0.9  # membrane leak multiplier per step: v <- decay * v
+    threshold: float = 1.0  # fire when v >= threshold
+    v_reset: float = 0.0  # post-spike reset potential
+    refractory: int = 1  # steps a neuron stays silent after firing
+
+
+def lif_step_jnp(
+    v: jnp.ndarray,
+    refr: jnp.ndarray,
+    current: jnp.ndarray,
+    params: LIFParams,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One LIF step: returns (v', refr', fired).  Pure-jnp reference.
+
+    Mirrors `repro.kernels.lif_step.ref.lif_step_ref` (the kernel oracle).
+    """
+    active = refr <= 0
+    v = jnp.where(active, params.decay * v + current, v)
+    fired = active & (v >= params.threshold)
+    v = jnp.where(fired, params.v_reset, v)
+    refr = jnp.where(fired, params.refractory, jnp.maximum(refr - 1, 0))
+    return v, refr, fired
+
+
+def lif_run(
+    weights: jnp.ndarray,
+    input_drive: jnp.ndarray,
+    params: LIFParams,
+    *,
+    use_pallas: bool = False,
+    seed: int = 0,
+) -> np.ndarray:
+    """Run T steps of a recurrently-connected LIF population.
+
+    Args:
+      weights: (N, N) synaptic matrix; weights[i, j] = strength i -> j.
+        Feedforward nets are block-superdiagonal; "random" nets are sparse
+        dense-stored.
+      input_drive: (T, N) external input current per step (e.g. Poisson
+        encoded stimulus on the input layer, zero elsewhere).
+      params: LIF constants.
+      use_pallas: route the membrane update through the Pallas kernel
+        (interpret mode on CPU) instead of pure jnp.
+
+    Returns:
+      (T, N) uint8 spike raster (host numpy).
+    """
+    n = weights.shape[0]
+    if use_pallas:
+        from repro.kernels.lif_step.ops import lif_step as step_fn
+    else:
+        step_fn = functools.partial(lif_step_jnp, params=params)
+
+    def body(carry, drive_t):
+        v, refr, last_spikes = carry
+        # Spikes from step t-1 arrive as current at step t (1-step synapse delay).
+        syn_current = last_spikes.astype(weights.dtype) @ weights
+        if use_pallas:
+            v, refr, fired = step_fn(
+                v, refr, syn_current + drive_t,
+                decay=params.decay, threshold=params.threshold,
+                v_reset=params.v_reset, refractory=params.refractory,
+            )
+        else:
+            v, refr, fired = step_fn(v, refr, syn_current + drive_t)
+        return (v, refr, fired.astype(weights.dtype)), fired
+
+    v0 = jnp.zeros((n,), dtype=weights.dtype)
+    refr0 = jnp.zeros((n,), dtype=jnp.int32)
+    s0 = jnp.zeros((n,), dtype=weights.dtype)
+    _, raster = jax.lax.scan(body, (v0, refr0, s0), input_drive)
+    return np.asarray(raster).astype(np.uint8)

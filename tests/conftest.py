@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_graph(n: int, p: float, seed: int = 0, max_w: int = 100):
+    """Random undirected weighted graph as a repro.core Graph."""
+    from repro.core.graph import build_graph
+
+    r = np.random.default_rng(seed)
+    mask = np.triu(r.random((n, n)) < p, k=1)
+    src, dst = np.nonzero(mask)
+    w = r.integers(1, max_w, src.shape[0])
+    return build_graph(n, src, dst, w)

@@ -1,0 +1,102 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import decode_attend, init_kv_cache, mha, update_kv_cache
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    """Reference: full-matrix softmax with KV-head repetition."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+def test_mha_matches_naive(h, kvh, chunk):
+    rng = jax.random.PRNGKey(0)
+    b, s, hd = 2, 33, 16  # odd length exercises padding
+    q = jax.random.normal(rng, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kvh, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    out = mha(q, k, v, pos, pos, causal=True, kv_chunk=chunk)
+    ref = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_mha_sliding_window():
+    rng = jax.random.PRNGKey(3)
+    b, s, h, hd, w = 1, 48, 2, 8, 8
+    q = jax.random.normal(rng, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, s, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, h, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    out = mha(q, k, v, pos, pos, causal=True, window=w, kv_chunk=16)
+    ref = naive_attention(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_mha_cross_no_causal():
+    b, sq, skv, h, hd = 2, 5, 11, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(6), (b, sq, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(7), (b, skv, h, hd))
+    v = jax.random.normal(jax.random.PRNGKey(8), (b, skv, h, hd))
+    qpos = jnp.zeros((b, sq), jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(skv), (b, skv))
+    out = mha(q, k, v, qpos, kpos, causal=False, kv_chunk=4)
+    ref = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_decode_matches_mha_last_position():
+    b, s, h, kvh, hd = 2, 12, 4, 2, 8
+    q_all = jax.random.normal(jax.random.PRNGKey(9), (b, s, h, hd))
+    k_all = jax.random.normal(jax.random.PRNGKey(10), (b, s, kvh, hd))
+    v_all = jax.random.normal(jax.random.PRNGKey(11), (b, s, kvh, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    full = mha(q_all, k_all, v_all, pos, pos, causal=True, kv_chunk=4)
+    cache = init_kv_cache(b, s, kvh, hd, jnp.float32)
+    cache = update_kv_cache(cache, k_all, v_all, pos)
+    dec = decode_attend(q_all[:, -1:], cache["k"], cache["v"], cache["pos"],
+                        pos[:, -1:])
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_ring_cache_keeps_last_window():
+    b, kvh, hd, w = 1, 1, 4, 8
+    cache = init_kv_cache(b, w, kvh, hd, jnp.float32)
+    for t in range(20):
+        k_new = jnp.full((b, 1, kvh, hd), float(t))
+        cache = update_kv_cache(cache, k_new, k_new, jnp.full((b, 1), t, jnp.int32))
+    kept = sorted(np.asarray(cache["pos"])[0].tolist())
+    assert kept == list(range(12, 20))
+
+
+def test_prefill_longer_than_ring_cache():
+    b, s, kvh, hd, w = 1, 20, 1, 4, 8
+    k_all = jnp.arange(s, dtype=jnp.float32).reshape(1, s, 1, 1) * jnp.ones((b, s, kvh, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cache = init_kv_cache(b, w, kvh, hd, jnp.float32)
+    cache = update_kv_cache(cache, k_all, k_all, pos)
+    kept = sorted(np.asarray(cache["pos"])[0].tolist())
+    assert kept == list(range(12, 20))  # newest entries won deterministically

@@ -1,0 +1,77 @@
+import json
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import CheckpointManager
+
+
+def _tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(r.standard_normal((4, 4)), jnp.float32),
+                       "b": jnp.asarray(r.standard_normal(4), jnp.float32)},
+            "opt": {"m": jnp.zeros((4, 4)), "step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(10, tree)
+    restored, step = mgr.restore(tree)
+    assert step == 10
+    for a, b in zip(jax._src.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+import jax  # noqa: E402  (used above lazily)
+
+
+def test_latest_pointer_and_prune(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 4
+    assert sorted(mgr.all_steps()) == [3, 4]
+
+
+def test_restore_ignores_uncommitted_tmp(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree()
+    mgr.save(5, tree)
+    # simulate a crashed mid-write of step 6
+    (tmp_path / "step_000000006.tmp").mkdir()
+    (tmp_path / "step_000000006.tmp" / "arrays.npz").write_bytes(b"garbage")
+    restored, step = mgr.restore(tree)
+    assert step == 5
+
+
+def test_latest_not_flipped_if_dir_missing(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(3, _tree())
+    shutil.rmtree(tmp_path / "step_000000003")
+    assert mgr.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_tree())
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = _tree(1)
+    mgr.save_async(42, tree)
+    mgr.wait()
+    restored, step = mgr.restore(tree)
+    assert step == 42
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+
+
+def test_manifest_written(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree())
+    manifest = json.loads((tmp_path / "step_000000001" / "manifest.json").read_text())
+    assert manifest["step"] == 1
+    assert "params/w" in manifest["arrays"]

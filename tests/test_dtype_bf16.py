@@ -1,0 +1,37 @@
+"""Regression: bf16 production dtype must not promote through any block
+(the full configs run bf16; reduced smoke configs run f32, which once hid
+a carry-dtype mismatch in the layer scan)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.model import build_model
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_bf16_forward_all_archs(name):
+    cfg = dataclasses.replace(get_config(name).reduced(),
+                              param_dtype="bfloat16",
+                              activation_dtype="bfloat16")
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    fe = None
+    if cfg.family in ("vlm", "audio"):
+        fe = jax.random.normal(key, (2, cfg.frontend_seq, cfg.frontend_dim),
+                               jnp.bfloat16)
+    logits, _, _ = model.forward(params, tokens, mode="train", frontend=fe)
+    assert logits.dtype == jnp.bfloat16
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    # decode path too (this is where cache dtype mismatches bite)
+    caches = model.init_caches(2, 17)
+    _, caches, _ = model.forward(params, tokens, mode="prefill", caches=caches,
+                                 frontend=fe)
+    pos = jnp.full((2, 1), 16, jnp.int32)
+    dec, _, _ = model.forward(params, tokens[:, :1], mode="decode",
+                              caches=caches, positions=pos)
+    assert not bool(jnp.isnan(dec.astype(jnp.float32)).any())

@@ -1,0 +1,38 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_local_mesh
+from repro.runtime import HeartbeatMonitor, remesh_params
+from repro.runtime.elastic import remesh_params as _rm
+
+
+def test_remesh_preserves_values():
+    mesh_a = make_local_mesh()
+    mesh_b = make_local_mesh()  # "new" mesh after failure (same devices on CPU)
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    specs = {"w": P(None, None)}
+    placed = remesh_params(tree, mesh_a, specs)
+    moved = remesh_params(placed, mesh_b, specs)
+    np.testing.assert_array_equal(np.asarray(moved["w"]), np.asarray(tree["w"]))
+
+
+def test_heartbeat_straggler_detection():
+    mon = HeartbeatMonitor(num_hosts=4, window=8, threshold=1.5)
+    for step in range(8):
+        for h in range(4):
+            mon.report(h, step, 1.0 if h != 2 else 3.0)
+    assert mon.stragglers() == [2]
+
+
+def test_rebalance_plan_conserves_shards():
+    mon = HeartbeatMonitor(num_hosts=3, window=4)
+    for step in range(4):
+        mon.report(0, step, 1.0)
+        mon.report(1, step, 1.0)
+        mon.report(2, step, 5.0)
+    before = {0: 4, 1: 4, 2: 4}
+    after = mon.rebalance_plan(before)
+    assert sum(after.values()) == 12
+    assert after[2] < 4  # straggler sheds work

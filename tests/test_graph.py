@@ -1,0 +1,55 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import build_graph, edge_cut, partition_weights, validate_partition
+
+from conftest import random_graph
+
+
+def test_build_graph_merges_duplicates_and_drops_self_loops():
+    g = build_graph(4, src=[0, 0, 1, 2, 2], dst=[1, 1, 0, 2, 3], weight=[3, 4, 5, 9, 1])
+    # (0,1) appears 3 times (0->1 x2, 1->0) => merged weight 12; (2,2) dropped
+    assert g.num_edges == 2
+    nbrs, w = g.neighbors(0)
+    assert nbrs.tolist() == [1] and w.tolist() == [12]
+    assert g.total_adjwgt == 13
+
+
+def test_symmetry():
+    g = random_graph(50, 0.2, seed=1)
+    for v in range(50):
+        nbrs, w = g.neighbors(v)
+        for u, wt in zip(nbrs, w):
+            back_n, back_w = g.neighbors(int(u))
+            i = list(back_n).index(v)
+            assert back_w[i] == wt
+
+
+def test_edge_cut_matches_bruteforce():
+    g = random_graph(40, 0.3, seed=2)
+    part = np.random.default_rng(3).integers(0, 4, 40)
+    brute = 0
+    for v in range(40):
+        nbrs, w = g.neighbors(v)
+        for u, wt in zip(nbrs, w):
+            if part[v] != part[u]:
+                brute += int(wt)
+    assert edge_cut(g, part) == brute // 2
+
+
+@given(n=st.integers(5, 60), p=st.floats(0.05, 0.5), k=st.integers(2, 5),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_partition_weights_conserve_total(n, p, k, seed):
+    g = random_graph(n, p, seed=seed)
+    part = np.random.default_rng(seed).integers(0, k, n)
+    w = partition_weights(g, part, k)
+    assert w.sum() == g.total_vwgt
+
+
+def test_validate_partition_raises():
+    g = random_graph(20, 0.3, seed=4)
+    part = np.zeros(20, dtype=np.int64)
+    with pytest.raises(ValueError):
+        validate_partition(g, part, k=2, capacity=10)  # all 20 in partition 0

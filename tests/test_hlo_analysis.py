@@ -1,0 +1,38 @@
+"""Unit tests for the post-SPMD HLO collective-byte parser."""
+from repro.launch.hlo_analysis import collective_bytes, op_census
+
+SAMPLE = """
+HloModule jit_step
+
+%fused_computation.1 { ... }
+
+ENTRY %main {
+  %p0 = bf16[16,1024]{1,0} parameter(0)
+  %fusion.1 = bf16[16,1024]{1,0} fusion(%p0), kind=kLoop
+  %all-gather.1 = bf16[256,1024]{1,0} all-gather(%fusion.1), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}
+  %convert.2 = f32[16,1024]{1,0} convert(%p0)
+  %all-reduce.7 = f32[16,1024]{1,0} all-reduce(%convert.2), channel_id=2, to_apply=%add
+  %ar-start = f32[16,1024]{1,0} all-reduce-start(%convert.2), channel_id=3
+  %ar-done = f32[16,1024]{1,0} all-reduce-done(%ar-start)
+  %cp.1 = bf16[8,1,128]{2,1,0} collective-permute(%fusion.1), source_target_pairs={{0,1}}
+  ROOT %t = (bf16[256,1024]{1,0}) tuple(%all-gather.1)
+}
+"""
+
+
+def test_collective_bytes_sums_operands():
+    out = collective_bytes(SAMPLE)
+    # all-gather operand: bf16[16,1024] = 32768 B
+    assert out["all-gather"] == 16 * 1024 * 2
+    # two all-reduces (plain + start; done not double counted): f32[16,1024] x2
+    assert out["all-reduce"] == 2 * 16 * 1024 * 4
+    # collective-permute operand is the bf16 fusion [16,1024] (named ref)
+    assert out["collective-permute"] == 16 * 1024 * 2
+    assert out["_count"] == 4
+
+
+def test_op_census_counts():
+    c = op_census(SAMPLE)
+    assert c["all-gather"] == 1
+    assert c["fusion"] == 1
+    assert c.get("all-reduce", 0) == 2  # plain + start

@@ -1,0 +1,137 @@
+"""Per-kernel allclose vs the pure-jnp oracle (interpret mode on CPU),
+sweeping shapes and dtypes as required for every Pallas kernel."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hopcost import hop_distance_matrix, swap_delta
+from repro.core.mapping import pad_traffic
+from repro.kernels.hop_eval import hop_cost, hop_cost_ref
+from repro.kernels.lif_step import lif_step, lif_step_ref
+from repro.kernels.link_load import link_loads, link_loads_ref
+from repro.kernels.swap_delta import swap_deltas, swap_deltas_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------- hop_eval
+
+@pytest.mark.parametrize("k", [1, 7, 25, 128, 256, 300, 513])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_hop_cost_shapes_dtypes(k, dtype):
+    c = RNG.integers(0, 100, (k, k)).astype(dtype)
+    x = RNG.integers(0, 16, k).astype(np.float32)
+    y = RNG.integers(0, 16, k).astype(np.float32)
+    ref = hop_cost_ref(jnp.asarray(c, jnp.float32), jnp.asarray(x), jnp.asarray(y))
+    pal = hop_cost(jnp.asarray(c, jnp.float32), jnp.asarray(x), jnp.asarray(y),
+                   backend="interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), rtol=1e-6)
+
+
+@given(k=st.integers(2, 60), seed=st.integers(0, 999))
+@settings(max_examples=15, deadline=None)
+def test_hop_cost_property(k, seed):
+    r = np.random.default_rng(seed)
+    c = r.integers(0, 9, (k, k)).astype(np.float32)
+    x = r.integers(0, 6, k).astype(np.float32)
+    y = r.integers(0, 6, k).astype(np.float32)
+    pal = float(hop_cost(jnp.asarray(c), jnp.asarray(x), jnp.asarray(y),
+                         backend="interpret"))
+    brute = sum(c[i, j] * (abs(x[i] - x[j]) + abs(y[i] - y[j]))
+                for i in range(k) for j in range(k))
+    np.testing.assert_allclose(pal, brute, rtol=1e-5)
+
+
+# ----------------------------------------------------------- swap_delta
+
+@pytest.mark.parametrize("k,cores,w", [(5, 25, 5), (25, 25, 5), (100, 256, 16),
+                                       (256, 256, 16)])
+def test_swap_deltas_vs_ref_and_loop(k, cores, w):
+    c = RNG.integers(0, 100, (k, k)).astype(np.float64)
+    padded = pad_traffic(c, cores)
+    sym = padded + padded.T
+    placement = RNG.permutation(cores)
+    x = (placement % w).astype(np.float32)
+    y = (placement // w).astype(np.float32)
+    ref = np.asarray(swap_deltas_ref(jnp.asarray(sym, jnp.float32),
+                                     jnp.asarray(x), jnp.asarray(y)))
+    pal = np.asarray(swap_deltas(jnp.asarray(sym, jnp.float32),
+                                 jnp.asarray(x), jnp.asarray(y),
+                                 backend="interpret"))
+    np.testing.assert_allclose(pal, ref, rtol=1e-4, atol=1e-2)
+    dist = hop_distance_matrix(cores, w).astype(np.float64)
+    for _ in range(10):
+        a, b = RNG.integers(0, cores, 2)
+        expect = swap_delta(sym, placement, dist, int(a), int(b))
+        np.testing.assert_allclose(ref[a, b], expect, rtol=1e-5, atol=1e-2)
+
+
+def test_swap_deltas_diagonal_zero():
+    k = 40
+    c = RNG.integers(0, 50, (k, k)).astype(np.float32)
+    sym = c + c.T
+    x = RNG.integers(0, 8, k).astype(np.float32)
+    y = RNG.integers(0, 8, k).astype(np.float32)
+    out = np.asarray(swap_deltas(jnp.asarray(sym), jnp.asarray(x), jnp.asarray(y),
+                                 backend="interpret"))
+    np.testing.assert_allclose(np.diag(out), 0.0, atol=1e-3)
+
+
+# -------------------------------------------------------------- lif_step
+
+@pytest.mark.parametrize("n", [1, 8, 127, 128, 1000, 4096])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_lif_step_sweep(n, dtype):
+    v = RNG.standard_normal(n).astype(dtype)
+    refr = RNG.integers(0, 3, n).astype(np.int32)
+    cur = RNG.standard_normal(n).astype(dtype)
+    kw = dict(decay=0.9, threshold=1.0, v_reset=0.0, refractory=2)
+    pal = lif_step(jnp.asarray(v), jnp.asarray(refr), jnp.asarray(cur),
+                   backend="interpret", **kw)
+    ref = lif_step_ref(jnp.asarray(v), jnp.asarray(refr), jnp.asarray(cur), **kw)
+    np.testing.assert_allclose(np.asarray(pal[0]), np.asarray(ref[0]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(pal[1]), np.asarray(ref[1]))
+    np.testing.assert_array_equal(np.asarray(pal[2]), np.asarray(ref[2]))
+
+
+def test_lif_step_refractory_blocks_fire():
+    v = jnp.array([5.0, 5.0])
+    refr = jnp.array([2, 0], jnp.int32)
+    cur = jnp.zeros(2)
+    _, _, fired = lif_step(v, refr, cur, decay=1.0, threshold=1.0, v_reset=0.0,
+                           refractory=2, backend="interpret")
+    assert not bool(fired[0]) and bool(fired[1])
+
+
+# -------------------------------------------------------------- link_load
+
+@pytest.mark.parametrize("k,w,h", [(5, 5, 5), (25, 5, 5), (60, 16, 16),
+                                   (256, 16, 16), (30, 8, 4)])
+def test_link_loads_sweep(k, w, h):
+    c = RNG.integers(0, 30, (k, k)).astype(np.float32)
+    cores = RNG.permutation(w * h)[:k]
+    x = (cores % w).astype(np.float32)
+    y = (cores // w).astype(np.float32)
+    ref = link_loads_ref(jnp.asarray(c), jnp.asarray(x), jnp.asarray(y), w, h)
+    pal = link_loads(jnp.asarray(c), jnp.asarray(x), jnp.asarray(y), w, h,
+                     backend="interpret")
+    for a, b, name in zip(pal, ref, "EWSN"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   err_msg=name)
+
+
+def test_link_loads_total_equals_hop_weighted_traffic():
+    """Sum of all link loads == sum C[a,b] * manhattan distance."""
+    k, w, h = 30, 6, 5
+    c = RNG.integers(0, 20, (k, k)).astype(np.float32)
+    cores = RNG.permutation(w * h)[:k]
+    x = (cores % w).astype(np.float32)
+    y = (cores // w).astype(np.float32)
+    maps = link_loads(jnp.asarray(c), jnp.asarray(x), jnp.asarray(y), w, h,
+                      backend="interpret")
+    total = sum(float(np.asarray(m).sum()) for m in maps)
+    expect = float(hop_cost(jnp.asarray(c), jnp.asarray(x), jnp.asarray(y),
+                            backend="jnp"))
+    np.testing.assert_allclose(total, expect, rtol=1e-5)

@@ -1,0 +1,67 @@
+import numpy as np
+import pytest
+
+from repro.core.hopcost import hop_distance_matrix
+from repro.core.mapping import MAPPERS, pad_traffic, pso_search, sa_search, tabu_search
+
+
+def _instance(k=20, cores=25, seed=0):
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, 200, (k, k)).astype(np.float64)
+    np.fill_diagonal(c, 0)
+    return c, int(c.sum())
+
+
+def _cost_of(placement, traffic, cores, w, trace_len):
+    padded = pad_traffic(traffic, cores)
+    dist = hop_distance_matrix(cores, w)
+    d = dist[placement[:, None], placement[None, :]]
+    return float((d * padded[: len(placement), : len(placement)]).sum() / trace_len)
+
+
+@pytest.mark.parametrize("mapper", ["sa", "pso", "tabu"])
+def test_mapper_improves_over_random(mapper):
+    c, trace_len = _instance()
+    kwargs = {"sa": dict(iters=8000), "pso": dict(iters=40, swarm=16),
+              "tabu": dict(iters=60, candidates=64)}[mapper]
+    res = MAPPERS[mapper](c, 25, 5, trace_len, seed=0, **kwargs)
+    rng = np.random.default_rng(1)
+    rand = np.mean([
+        _cost_of(rng.permutation(25)[:20], c, 25, 5, trace_len) for _ in range(20)
+    ])
+    assert res.avg_hop < rand
+    # reported cost must equal recomputed cost of the returned placement
+    np.testing.assert_allclose(
+        res.avg_hop, _cost_of(res.placement, c, 25, 5, trace_len), rtol=1e-9)
+
+
+def test_placement_is_injective():
+    c, trace_len = _instance(k=25)
+    res = sa_search(c, 25, 5, trace_len, seed=0, iters=5000)
+    assert len(set(res.placement.tolist())) == 25
+
+
+def test_sa_deterministic():
+    c, trace_len = _instance(seed=2)
+    a = sa_search(c, 25, 5, trace_len, seed=7, iters=4000)
+    b = sa_search(c, 25, 5, trace_len, seed=7, iters=4000)
+    assert np.array_equal(a.placement, b.placement)
+
+
+def test_sa_usually_best_among_mappers():
+    """Paper §5.2: SA finds the best mapping within a budget (checked on
+    average over seeds to avoid flakiness)."""
+    wins = 0
+    for seed in range(3):
+        c, trace_len = _instance(seed=seed)
+        sa = sa_search(c, 25, 5, trace_len, seed=seed, iters=12_000)
+        pso = pso_search(c, 25, 5, trace_len, seed=seed, iters=40, swarm=16)
+        tabu = tabu_search(c, 25, 5, trace_len, seed=seed, iters=50, candidates=64)
+        if sa.avg_hop <= min(pso.avg_hop, tabu.avg_hop) + 1e-9:
+            wins += 1
+    assert wins >= 2
+
+
+def test_pad_traffic_rejects_too_many_partitions():
+    with pytest.raises(ValueError):
+        pad_traffic(np.ones((30, 30)), 25)

@@ -1,0 +1,65 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hopcost import hop_distance_matrix
+from repro.core.mapping import pad_traffic, sa_search
+from repro.core.mapping_jax import greedy_polish, sa_search_jax
+
+
+def _instance(k=15, seed=0):
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, 100, (k, k)).astype(np.float64)
+    np.fill_diagonal(c, 0)
+    return c, int(c.sum())
+
+
+def test_sa_jax_competitive_with_numpy_sa():
+    c, trace_len = _instance()
+    r_np = sa_search(c, 25, 5, trace_len, seed=0, iters=15_000)
+    r_jax = sa_search_jax(c, 25, 5, trace_len, seed=0, iters=2_000, chains=4,
+                          polish_backend="jnp")
+    assert r_jax.avg_hop <= r_np.avg_hop * 1.15
+    assert len(set(r_jax.placement.tolist())) == 15  # injective
+
+
+def test_greedy_polish_reaches_swap_local_optimum():
+    c, trace_len = _instance(seed=3)
+    cores, w = 25, 5
+    padded = pad_traffic(c, cores)
+    sym = jnp.asarray(padded + padded.T, jnp.float32)
+    rng = np.random.default_rng(0)
+    placement = jnp.asarray(rng.permutation(cores))
+    x = (jnp.arange(cores) % w).astype(jnp.float32)
+    y = (jnp.arange(cores) // w).astype(jnp.float32)
+    out, steps = greedy_polish(sym, placement, x, y, backend="jnp")
+    # local optimum: no single swap improves
+    dist = hop_distance_matrix(cores, w).astype(np.float64)
+    sym_np = np.asarray(sym, np.float64)
+    pl = np.asarray(out)
+    from repro.core.hopcost import swap_delta
+    best = min(swap_delta(sym_np, pl, dist, a, b)
+               for a in range(cores) for b in range(a + 1, cores))
+    assert best >= -1e-3
+    assert steps >= 1
+
+
+def test_polish_never_worsens():
+    c, trace_len = _instance(seed=5)
+    cores, w = 25, 5
+    padded = pad_traffic(c, cores)
+    sym_np = padded + padded.T
+    dist = hop_distance_matrix(cores, w).astype(np.float64)
+    rng = np.random.default_rng(1)
+    placement = rng.permutation(cores)
+
+    def cost(pl):
+        return (dist[pl[:, None], pl[None, :]] * sym_np).sum() / 2
+
+    before = cost(placement)
+    out, _ = greedy_polish(jnp.asarray(sym_np, jnp.float32),
+                           jnp.asarray(placement),
+                           (jnp.arange(cores) % w).astype(jnp.float32),
+                           (jnp.arange(cores) // w).astype(jnp.float32),
+                           backend="jnp")
+    after = cost(np.asarray(out))
+    assert after <= before + 1e-6

@@ -1,0 +1,83 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.nocsim.sim import simulate_noc
+from repro.nocsim.xy import link_count, link_ids_for_routes, next_link, route_hops
+
+
+@given(w=st.integers(2, 8), h=st.integers(2, 8), seed=st.integers(0, 2000))
+@settings(max_examples=30, deadline=None)
+def test_route_expansion_matches_stepwise_walk(w, h, seed):
+    rng = np.random.default_rng(seed)
+    n = w * h
+    src = rng.integers(0, n, 20)
+    dst = rng.integers(0, n, 20)
+    ids, pkt = link_ids_for_routes(src, dst, w, h)
+    # stepwise walk must traverse exactly the same multiset of links
+    for p in range(20):
+        cur = np.array([src[p]])
+        walked = []
+        while cur[0] != dst[p]:
+            nxt, link = next_link(cur, np.array([dst[p]]), w, h)
+            walked.append(int(link[0]))
+            cur = nxt
+        mine = sorted(ids[pkt == p].tolist())
+        assert mine == sorted(walked)
+        assert len(walked) == route_hops(np.array([src[p]]), np.array([dst[p]]), w)[0]
+
+
+def _tiny_trace(seed=0, n_spikes=200, timesteps=20, k=6, cores=9):
+    rng = np.random.default_rng(seed)
+    part = rng.integers(0, k, 30)
+    placement = rng.permutation(cores)[:k]
+    t = np.sort(rng.integers(0, timesteps, n_spikes))
+    src = rng.integers(0, 30, n_spikes)
+    dst = rng.integers(0, 30, n_spikes)
+    return t, src, dst, part, placement
+
+
+def test_queued_no_congestion_latency_equals_hops():
+    t, src, dst, part, placement = _tiny_trace()
+    # capacity so high nothing ever queues
+    s = simulate_noc(t, src, dst, part, placement, 3, 3,
+                     link_capacity=10_000, mode="queued")
+    assert s.congestion_count == 0
+    np.testing.assert_allclose(s.avg_latency, s.avg_hop)
+
+
+def test_queued_congestion_grows_latency():
+    t, src, dst, part, placement = _tiny_trace(n_spikes=2000, timesteps=4)
+    free = simulate_noc(t, src, dst, part, placement, 3, 3,
+                        link_capacity=10_000, mode="queued")
+    jam = simulate_noc(t, src, dst, part, placement, 3, 3,
+                       link_capacity=1, mode="queued")
+    assert jam.congestion_count > 0
+    assert jam.avg_latency > free.avg_latency
+    # conservation: hops identical regardless of queueing
+    assert jam.total_hops == free.total_hops
+
+
+def test_analytic_matches_queued_static_quantities():
+    t, src, dst, part, placement = _tiny_trace(seed=3)
+    a = simulate_noc(t, src, dst, part, placement, 3, 3, mode="analytic")
+    q = simulate_noc(t, src, dst, part, placement, 3, 3,
+                     link_capacity=10_000, mode="queued")
+    assert a.total_hops == q.total_hops
+    assert a.num_noc_spikes == q.num_noc_spikes
+    np.testing.assert_allclose(a.edge_variance, q.edge_variance)
+    np.testing.assert_allclose(a.dynamic_energy_pj, q.dynamic_energy_pj)
+
+
+def test_energy_proportional_to_hops():
+    t, src, dst, part, placement = _tiny_trace(seed=4)
+    s = simulate_noc(t, src, dst, part, placement, 3, 3, mode="analytic")
+    from repro.nocsim.energy import EnergyModel
+    e = EnergyModel()
+    expected = s.total_hops * (e.router_pj_per_spike + e.link_pj_per_spike) \
+        + s.num_local_spikes * e.local_pj_per_spike
+    np.testing.assert_allclose(s.dynamic_energy_pj, expected)
+
+
+def test_link_count():
+    assert link_count(5, 5) == 2 * 4 * 5 + 2 * 5 * 4
+    assert link_count(16, 16) == 2 * 15 * 16 * 2

@@ -1,0 +1,81 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import greedy_kl_partition, sco_partition
+from repro.core.coarsen import coarsen, contract, heavy_edge_matching
+from repro.core.graph import edge_cut, partition_weights, validate_partition
+from repro.core.partition import sneap_partition
+
+from conftest import random_graph
+
+
+def test_matching_is_symmetric():
+    g = random_graph(80, 0.1, seed=5)
+    match = heavy_edge_matching(g, np.random.default_rng(0))
+    for v in range(80):
+        assert match[match[v]] == v
+
+
+def test_contract_preserves_totals():
+    g = random_graph(60, 0.2, seed=6)
+    match = heavy_edge_matching(g, np.random.default_rng(1))
+    c = contract(g, match)
+    assert c.total_vwgt == g.total_vwgt
+    # total edge weight = original minus weights folded inside matched pairs
+    internal = sum(int(w) for v in range(60)
+                   for u, w in zip(*g.neighbors(v)) if match[v] == u) // 2
+    assert c.total_adjwgt == g.total_adjwgt - internal
+
+
+def test_coarsen_levels_shrink():
+    g = random_graph(300, 0.05, seed=7)
+    levels = coarsen(g, np.random.default_rng(2), coarsen_to=32)
+    sizes = [lv.num_vertices for lv in levels]
+    assert sizes == sorted(sizes, reverse=True)
+    assert all(lv.total_vwgt == g.total_vwgt for lv in levels)
+
+
+def test_sneap_partition_valid_and_better_than_random():
+    g = random_graph(200, 0.08, seed=8)
+    res = sneap_partition(g, capacity=32, seed=0)
+    validate_partition(g, res.part, res.k, 32)
+    rng = np.random.default_rng(0)
+    rand_cuts = []
+    for _ in range(5):
+        part = np.repeat(np.arange(res.k), -(-200 // res.k))[:200]
+        rng.shuffle(part)
+        rand_cuts.append(edge_cut(g, part))
+    assert res.edge_cut < min(rand_cuts)
+
+
+def test_sneap_deterministic():
+    g = random_graph(120, 0.1, seed=9)
+    a = sneap_partition(g, capacity=32, seed=3)
+    b = sneap_partition(g, capacity=32, seed=3)
+    assert np.array_equal(a.part, b.part) and a.edge_cut == b.edge_cut
+
+
+def test_sneap_beats_or_matches_sco():
+    g = random_graph(150, 0.1, seed=10)
+    sneap = sneap_partition(g, capacity=32, seed=0)
+    sco = sco_partition(g, capacity=32)
+    assert sneap.edge_cut <= sco.edge_cut
+
+
+def test_greedy_kl_valid():
+    g = random_graph(100, 0.1, seed=11)
+    res = greedy_kl_partition(g, capacity=32, seed=0, max_passes=3)
+    validate_partition(g, res.part, res.k, 32)
+
+
+@given(n=st.integers(20, 120), p=st.floats(0.05, 0.3), seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_partition_property(n, p, seed):
+    """Every neuron assigned once; capacity respected; cut consistent."""
+    g = random_graph(n, p, seed=seed)
+    cap = max(8, n // 6)
+    res = sneap_partition(g, capacity=cap, seed=seed)
+    validate_partition(g, res.part, res.k, cap)
+    assert res.edge_cut == edge_cut(g, res.part)
+    assert partition_weights(g, res.part, res.k).sum() == n

@@ -1,0 +1,67 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.snn.lif import LIFParams, lif_run
+from repro.snn.simulate import _expand_trace, profile_snn
+from repro.snn.topology import PAPER_SNNS, make_snn
+
+
+def test_lif_fires_on_suprathreshold_input():
+    n = 4
+    w = jnp.zeros((n, n), jnp.float32)
+    drive = np.zeros((10, n), np.float32)
+    drive[2, 1] = 5.0  # strong input to neuron 1 at t=2
+    raster = lif_run(w, jnp.asarray(drive), LIFParams(threshold=1.0))
+    assert raster[2, 1] == 1
+    assert raster.sum() == 1  # nothing else fires
+
+
+def test_lif_subthreshold_decays_no_fire():
+    n = 2
+    w = jnp.zeros((n, n), jnp.float32)
+    drive = np.full((50, n), 0.05, np.float32)  # steady-state v = .05/(1-.9) = .5
+    raster = lif_run(w, jnp.asarray(drive), LIFParams(decay=0.9, threshold=1.0))
+    assert raster.sum() == 0
+
+
+def test_lif_synaptic_propagation():
+    # 0 -> 1 with strong synapse: firing 0 at t fires 1 at t+1
+    w = jnp.zeros((2, 2), jnp.float32).at[0, 1].set(2.0)
+    drive = np.zeros((6, 2), np.float32)
+    drive[1, 0] = 2.0
+    raster = lif_run(w, jnp.asarray(drive), LIFParams())
+    assert raster[1, 0] == 1 and raster[2, 1] == 1
+
+
+def test_expand_trace_counts():
+    raster = np.zeros((3, 3), np.uint8)
+    raster[0, 0] = 1
+    raster[2, 1] = 1
+    xadj = np.array([0, 2, 3, 3])  # n0 -> {a, b}, n1 -> {c}
+    adjncy = np.array([1, 2, 2])
+    t, s, d = _expand_trace(raster, xadj, adjncy)
+    assert len(t) == 3
+    assert (s == np.array([0, 0, 1])).all()
+    assert (d == np.array([1, 2, 2])).all()
+    assert (t == np.array([0, 0, 2])).all()
+
+
+def test_profile_consistency_small():
+    topo = make_snn("smooth_320")
+    prof = profile_snn(topo, num_steps=100, seed=0)
+    # graph total weight == number of trace transmissions (both count
+    # per-synapse spike deliveries over the window)
+    assert prof.graph.total_adjwgt == prof.num_spikes
+    assert prof.graph.num_vertices == topo.num_neurons
+    # every trace record rides an existing synapse
+    syn = set(zip(topo.syn_src.tolist(), topo.syn_dst.tolist()))
+    pick = np.random.default_rng(0).integers(0, prof.num_spikes, 50)
+    for i in pick:
+        assert (int(prof.trace_src[i]), int(prof.trace_dst[i])) in syn
+
+
+def test_all_paper_snns_build():
+    for name in PAPER_SNNS:
+        topo = make_snn(name)
+        assert topo.num_neurons == int(name.split("_")[1])
+        assert topo.weights.shape == (topo.num_neurons,) * 2

@@ -1,0 +1,61 @@
+"""End-to-end training: loss decreases, checkpoint restart is bit-exact."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import train_loop
+
+
+def _tiny(name="llama3-8b"):
+    cfg = get_config(name).reduced()
+    return dataclasses.replace(cfg, num_layers=2, d_model=64, num_heads=2,
+                               num_kv_heads=2, head_dim=32, d_ff=128,
+                               vocab_size=128)
+
+
+def test_loss_decreases():
+    cfg = _tiny()
+    mesh = make_local_mesh()
+    out = train_loop(cfg, mesh, steps=80, batch=4, seq=32, lr=1e-2,
+                     log_every=200, print_fn=lambda *_: None)
+    first = np.mean(out["losses"][:5])
+    last = np.mean(out["losses"][-5:])
+    # induction on the repeat task is slow at this scale; require a clear,
+    # monotone-ish improvement rather than convergence
+    assert last < first * 0.97, (first, last)
+
+
+def test_checkpoint_restart_bit_exact(tmp_path):
+    cfg = _tiny()
+    mesh = make_local_mesh()
+    # straight run to 20
+    full = train_loop(cfg, mesh, steps=20, batch=2, seq=16, lr=1e-3,
+                      log_every=100, print_fn=lambda *_: None)
+    # same schedule (steps=20) but halt cleanly at 10 after a checkpoint,
+    # then resume to 20
+    train_loop(cfg, mesh, steps=20, batch=2, seq=16, lr=1e-3,
+               ckpt_dir=tmp_path, ckpt_every=10, log_every=100, stop_at=10,
+               print_fn=lambda *_: None)
+    resumed = train_loop(cfg, mesh, steps=20, batch=2, seq=16, lr=1e-3,
+                         ckpt_dir=tmp_path, resume=True, log_every=100,
+                         print_fn=lambda *_: None)
+    # deterministic data + optimizer: final params identical
+    for a, b in zip(jax.tree.leaves(full["params"]),
+                    jax.tree.leaves(resumed["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_trains():
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=64, num_heads=2,
+                              num_kv_heads=2, head_dim=32, num_experts=4,
+                              moe_d_ff=32, vocab_size=128)
+    mesh = make_local_mesh()
+    out = train_loop(cfg, mesh, steps=20, batch=2, seq=32, lr=3e-3,
+                     log_every=100, print_fn=lambda *_: None)
+    assert np.isfinite(out["losses"]).all()
+    assert np.mean(out["losses"][-3:]) < np.mean(out["losses"][:3])
