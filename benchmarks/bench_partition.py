@@ -1,18 +1,42 @@
 """Paper Fig. 4: partitioning-phase global traffic + execution time,
-SNEAP (multilevel) vs SpiNeMap (greedy KL), normalized to SpiNeMap."""
+SNEAP (multilevel) vs SpiNeMap (greedy KL), normalized to SpiNeMap.
+
+Also tracks the scalar-vs-vec partitioning engines (`sneap_partition`'s
+`impl` switch): cut parity and wall-clock on the paper SNNs, plus a
+>=100k-neuron synthetic graph where the array-parallel engine's >=10x
+speedup is the headline (BENCH_* trajectory `partition_impl/*`).
+"""
 from __future__ import annotations
 
+import time
+
+import numpy as np
+
 from repro.core import greedy_kl_partition, sneap_partition
+from repro.core.graph import build_graph
 
 from .common import emit, get_profile, scale
+
+# >=100k neurons in both modes so the large-graph speedup is always
+# measured; full mode doubles the synaptic density.
+SYNTH_QUICK = dict(n=100_000, avg_deg=8)
+SYNTH_FULL = dict(n=120_000, avg_deg=16)
+
+
+def synthetic_graph(n: int, avg_deg: int, seed: int = 0, max_w: int = 50):
+    """Sparse random spike graph (edge-list sampling; no dense n^2 mask)."""
+    r = np.random.default_rng(seed)
+    m = n * avg_deg // 2
+    return build_graph(n, r.integers(0, n, m), r.integers(0, n, m),
+                       r.integers(1, max_w, m))
 
 
 def run(full: bool = False) -> list[dict]:
     rows = []
     for snn in scale(full)["snns"]:
         prof = get_profile(snn, full)
-        mesh_cores = 25 if prof.num_neurons <= 25 * 256 else 64
         sneap = sneap_partition(prof.graph, capacity=256, seed=0)
+        vec = sneap_partition(prof.graph, capacity=256, seed=0, impl="vec")
         spine = greedy_kl_partition(prof.graph, capacity=256, seed=0)
         rows.append({
             "name": f"partition/{snn}",
@@ -25,7 +49,39 @@ def run(full: bool = False) -> list[dict]:
                 f"spikes={prof.num_spikes};k={sneap.k}"
             ),
         })
-    emit(rows, "Fig4: partitioning traffic + time (SNEAP vs greedy-KL)")
+        rows.append({
+            "name": f"partition_impl/{snn}",
+            "us_per_call": round(vec.seconds * 1e6, 1),
+            "derived": (
+                f"cut_scalar={sneap.edge_cut};cut_vec={vec.edge_cut};"
+                f"cut_ratio={vec.edge_cut / max(sneap.edge_cut, 1):.3f};"
+                f"time_scalar_s={sneap.seconds:.3f};time_vec_s={vec.seconds:.3f};"
+                f"speedup={sneap.seconds / max(vec.seconds, 1e-9):.1f}x;k={vec.k}"
+            ),
+        })
+
+    # Large synthetic graph: the scale where the scalar engine's per-vertex
+    # Python loops become impractical and the vec engine must deliver >=10x.
+    cfg = SYNTH_FULL if full else SYNTH_QUICK
+    g = synthetic_graph(**cfg)
+    t0 = time.perf_counter()
+    vec = sneap_partition(g, capacity=256, seed=0, impl="vec")
+    t_vec = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    scalar = sneap_partition(g, capacity=256, seed=0, impl="scalar")
+    t_scalar = time.perf_counter() - t0
+    rows.append({
+        "name": f"partition_impl/synthetic_{cfg['n']}",
+        "us_per_call": round(t_vec * 1e6, 1),
+        "derived": (
+            f"n={cfg['n']};edges={g.num_edges};"
+            f"cut_scalar={scalar.edge_cut};cut_vec={vec.edge_cut};"
+            f"cut_ratio={vec.edge_cut / max(scalar.edge_cut, 1):.3f};"
+            f"time_scalar_s={t_scalar:.2f};time_vec_s={t_vec:.2f};"
+            f"speedup={t_scalar / max(t_vec, 1e-9):.1f}x;k={vec.k}"
+        ),
+    })
+    emit(rows, "Fig4: partitioning traffic + time (SNEAP vs greedy-KL; scalar vs vec)")
     return rows
 
 

@@ -5,6 +5,18 @@ vertex m is folded with the unmatched neighbor n maximizing the weight of
 edge (m, n).  Matched pairs become single vertices of the next-coarser
 graph; parallel edges merge by summing weights.  Coarsening repeats level
 by level until the graph is small or stops shrinking.
+
+Two matching engines share the `match[v] = partner` contract:
+
+* ``heavy_edge_matching`` — the paper's sequential visit-in-random-order
+  loop (reference implementation, O(n) Python iterations).
+* ``heavy_edge_matching_vec`` — round-based propose–accept matching with
+  a random proposer/acceptor role split per round: proposers pick their
+  heaviest free acceptor neighbor via one vectorized segment-argmax over
+  the CSR arrays, acceptors lock in their heaviest proposer, and the
+  disjoint roles keep accepted pairs conflict-free.  A few rounds reach a
+  near-maximal matching with no per-vertex Python work (details and the
+  tie-breaking rationale on the function itself).
 """
 from __future__ import annotations
 
@@ -12,7 +24,7 @@ import numpy as np
 
 from .graph import Graph
 
-__all__ = ["heavy_edge_matching", "contract", "coarsen"]
+__all__ = ["heavy_edge_matching", "heavy_edge_matching_vec", "contract", "coarsen"]
 
 
 def heavy_edge_matching(graph: Graph, rng: np.random.Generator) -> np.ndarray:
@@ -36,6 +48,89 @@ def heavy_edge_matching(graph: Graph, rng: np.random.Generator) -> np.ndarray:
             match[u] = v
         else:
             match[v] = v
+    return match
+
+
+_TIE_BITS = 20  # per-edge random tie-break key width
+
+
+def heavy_edge_matching_vec(
+    graph: Graph,
+    rng: np.random.Generator | None = None,
+    max_vwgt: int | None = None,
+    max_rounds: int = 64,
+) -> np.ndarray:
+    """Array-parallel heavy-edge matching (same contract as the scalar loop).
+
+    Propose-accept rounds with a random role split: each round every free
+    vertex is coin-flipped into proposer or acceptor; proposers pick their
+    heaviest free acceptor neighbor via one segment-argmax over the CSR
+    arrays, and each acceptor locks in its heaviest proposer.  Because the
+    two roles are disjoint, accepted pairs never conflict — no sequential
+    tie-breaking is needed and the whole round is whole-array numpy.
+
+    Weight ties break by fresh per-edge random keys each round.  That
+    matters: profiled SNN graphs carry many equal spike counts, and any
+    deterministic tie-break points whole neighborhoods at one vertex, so a
+    round locks in O(1) pairs instead of O(n) (dense equal-weight layers
+    degrade worst — mutual-proposal matching stalls outright there).
+
+    ``max_vwgt`` filters candidate edges up front so merged vertices never
+    exceed the cap.
+    """
+    n = graph.num_vertices
+    match = np.full(n, -1, dtype=np.int64)
+    xadj, adjncy, adjwgt, vwgt = graph.xadj, graph.adjncy, graph.adjwgt, graph.vwgt
+    m = adjncy.shape[0]
+    if m:
+        if rng is None:
+            rng = np.random.default_rng(0)
+        # Both int64 packings must fit: the (weight << tie) proposal key and
+        # the (weight * n + vertex) acceptance key.
+        if int(adjwgt.max()) >= min(1 << (62 - _TIE_BITS), (1 << 62) // max(n, 1)):
+            raise OverflowError("edge weights too large for the packed match keys")
+        src = np.repeat(np.arange(n, dtype=np.int64), np.diff(xadj))
+        nbr = adjncy.astype(np.int64)
+        nonempty = xadj[:-1] < xadj[1:]
+        starts = xadj[:-1][nonempty]
+        cap_ok = True
+        if max_vwgt is not None:
+            cap_ok = (vwgt[src] + vwgt[nbr]) <= max_vwgt
+        for _ in range(max_rounds):
+            free = match == -1
+            alive = free[src] & free[nbr] & cap_ok
+            if not alive.any():
+                break
+            proposer = rng.random(n) < 0.5
+            ok = alive & proposer[src] & ~proposer[nbr]
+            if not ok.any():
+                continue  # unlucky coin flips; candidate edges still exist
+            # Lexicographic (weight, random tie) as one int64 key; CSR rows
+            # are contiguous, so one reduceat over non-empty rows is the
+            # whole segment-max.
+            key = np.where(
+                ok,
+                (adjwgt << _TIE_BITS) + rng.integers(0, 1 << _TIE_BITS, m),
+                -1,
+            )
+            rowmax = np.full(n, -1, dtype=np.int64)
+            rowmax[nonempty] = np.maximum.reduceat(key, starts)
+            hit = ok & (key == rowmax[src])
+            proposal = np.full(n, n, dtype=np.int64)
+            np.minimum.at(proposal, src[hit], nbr[hit])
+            prop_from = np.nonzero(proposal < n)[0]
+            # Acceptance: each target keeps its heaviest proposer; the
+            # (weight, proposer-id) key makes the winner recoverable as
+            # key % n.
+            pw = rowmax[prop_from] >> _TIE_BITS
+            acc = np.full(n, -1, dtype=np.int64)
+            np.maximum.at(acc, proposal[prop_from], pw * n + prop_from)
+            targets = np.nonzero(acc >= 0)[0]
+            winners = acc[targets] % n
+            match[targets] = winners
+            match[winners] = targets
+    unmatched = match == -1
+    match[unmatched] = np.nonzero(unmatched)[0]
     return match
 
 
@@ -87,20 +182,28 @@ def coarsen(
     max_vwgt: int | None = None,
     shrink_floor: float = 0.95,
     max_levels: int = 40,
+    impl: str = "scalar",
 ) -> list[Graph]:
     """Coarsen level by level; returns [G_0, G_1, ..., G_c] (fine -> coarse).
 
     Stops when the graph has <= ``coarsen_to`` vertices, stops shrinking
     (|G_{i+1}| > shrink_floor * |G_i|), or ``max_levels`` is hit.
     ``max_vwgt`` bounds the merged vertex weight so that coarse vertices
-    stay placeable within a core's neuron capacity.
+    stay placeable within a core's neuron capacity.  ``impl`` selects the
+    matching engine: ``"scalar"`` (sequential reference) or ``"vec"``
+    (round-based array-parallel matching).
     """
+    if impl not in ("scalar", "vec"):
+        raise ValueError(f"unknown coarsening impl {impl!r}")
     levels = [graph]
     for _ in range(max_levels):
         g = levels[-1]
         if g.num_vertices <= coarsen_to or g.num_edges == 0:
             break
-        match = heavy_edge_matching(g, rng)
+        if impl == "vec":
+            match = heavy_edge_matching_vec(g, rng, max_vwgt=max_vwgt)
+        else:
+            match = heavy_edge_matching(g, rng)
         if max_vwgt is not None:
             # Undo matches whose merged weight would exceed the cap.
             v = np.arange(g.num_vertices)

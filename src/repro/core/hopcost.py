@@ -79,7 +79,9 @@ def swap_delta(
     """Change in total hop-weighted traffic if partitions a and b swap cores.
 
     `sym_traffic` must be C + C.T.  O(k) instead of re-evaluating the full
-    O(k^2) objective — the SA inner-loop trick.
+    O(k^2) objective — the SA inner-loop trick.  Canonical definition of the
+    formula; `repro.core.mapping_jax._delta_one` (device twin) and
+    `repro.kernels.swap_delta` (all-pairs MXU batch) both implement it.
     """
     ca, cb = placement[a], placement[b]
     d_a = dist[ca, placement]

@@ -28,7 +28,11 @@ class MappingResult:
     placement: np.ndarray  # (k,) core id per (real) partition
     avg_hop: float
     seconds: float
-    # Convergence history: (elapsed_seconds, best_avg_hop) samples (Fig 5).
+    # Convergence history: (time_axis, best_avg_hop) samples (Fig 5).  Host
+    # searches record elapsed seconds; device searches (mapping_jax) run the
+    # whole chain inside one lax.scan where wall-clock sampling is
+    # impossible, so they record the temperature-epoch index instead and
+    # `seconds` holds the single post-run elapsed measurement.
     history: list[tuple[float, float]] = field(default_factory=list)
     evaluations: int = 0
 

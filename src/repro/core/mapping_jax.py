@@ -45,7 +45,12 @@ def _cost(sym: jnp.ndarray, placement: jnp.ndarray, dist: jnp.ndarray) -> jnp.nd
 
 
 def _delta_one(sym, dist, placement, a, b):
-    """O(K) incremental swap delta (jnp mirror of hopcost.swap_delta)."""
+    """O(K) incremental swap delta.
+
+    The formula and its derivation live in one place:
+    `repro.core.hopcost.swap_delta` (the host/numpy original).  This is its
+    jnp twin, kept branch-free so it traces cleanly under scan/vmap.
+    """
     ca = placement[a]
     cb = placement[b]
     d_a = dist[ca, placement]
@@ -141,8 +146,13 @@ def sa_search_jax(
         best, _ = greedy_polish(sym, best, x, y, backend=polish_backend)
     final_cost = float(_cost(sym, best, dist))
     seconds = time.perf_counter() - start
-    hist = [(seconds * (i + 1) / best_hist.shape[1], float(jnp.min(best_hist[:, : i + 1])) / trace_length)
-            for i in range(best_hist.shape[1])]
+    # The scan runs entirely on device, so per-epoch wall-clock timestamps
+    # do not exist; history is keyed by temperature-epoch index instead
+    # (see MappingResult.history), with elapsed time recorded once above.
+    best_by_epoch = np.minimum.accumulate(
+        np.asarray(best_hist, dtype=np.float64).min(axis=0)
+    )
+    hist = [(float(i), c / trace_length) for i, c in enumerate(best_by_epoch)]
     return MappingResult(
         placement=np.asarray(best)[:k].astype(np.int64),
         avg_hop=final_cost / trace_length,

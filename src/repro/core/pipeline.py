@@ -65,12 +65,16 @@ def run_toolchain(
     noc_mode: str = "queued",
     link_capacity: int = 4,
     mapper_kwargs: dict | None = None,
+    partition_impl: str = "scalar",
 ) -> ToolchainResult:
     """Run one toolchain (sneap | spinemap | sco) over a profiled SNN.
 
     * sneap:    multilevel partitioning + SA placement (paper default).
     * spinemap: greedy-KL partitioning + PSO placement.
     * sco:      sequential packing + sequential placement.
+
+    ``partition_impl`` selects the sneap partitioning engine ("scalar" or
+    "vec" — see `repro.core.partition`); ignored by the baselines.
     """
     num_cores = mesh_w * mesh_h
     phase: dict[str, float] = {}
@@ -79,7 +83,7 @@ def run_toolchain(
     t0 = time.perf_counter()
     if method == "sneap":
         pres = sneap_partition(profile.graph, capacity=capacity, seed=seed,
-                               max_k=num_cores)
+                               max_k=num_cores, impl=partition_impl)
     elif method == "spinemap":
         pres = greedy_kl_partition(profile.graph, capacity=capacity, seed=seed,
                                    max_k=num_cores)

@@ -11,6 +11,12 @@ weight, at which point the trailing non-improving moves are undone.
 As the paper notes, this single-queue / boundary-only scheme has weaker
 hill-climbing than full Kernighan–Lin, but is dramatically faster — that
 trade is the point of the multilevel paradigm.
+
+This is the *scalar* refinement engine: best cut quality, O(n) Python
+iterations per pass.  ``refine_vec.refine_level_vec`` is the batched
+array-parallel alternative for large graphs; ``uncoarsen_vec`` picks
+between the two per level (see `repro.core.partition` for the engine
+overview).
 """
 from __future__ import annotations
 

@@ -1,0 +1,293 @@
+"""Array-parallel boundary refinement (the "vec" partitioning engine).
+
+The scalar engine in ``refine.py`` follows the paper: a single global
+priority queue pops one boundary vertex at a time, re-deriving its
+per-partition external degrees with a fresh ``np.bincount`` per pop.  That
+is O(n) Python iterations per pass and dominates end-to-end partitioning
+time on large SNNs.
+
+This module is the Jet/label-propagation-style alternative: one shot of
+
+    ``np.bincount(row * k + part[adjncy], weights=adjwgt)``
+
+produces the external degree of *every* boundary vertex toward *every*
+partition simultaneously; gains for all boundary vertices follow by
+elementwise arithmetic, and a conflict-free batch of positive-gain moves
+is applied per iteration:
+
+1. every boundary vertex picks its best feasible target partition
+   (capacity-checked against the pre-batch partition weights);
+2. candidates adjacent to a higher-gain candidate are suppressed (one
+   Luby-style round), so the surviving movers form an independent set and
+   their gains are exact and additive;
+3. movers are admitted in gain order per target partition under the
+   remaining capacity (grouped cumulative-sum bookkeeping, no Python
+   loop over vertices);
+4. repeat until no positive-gain move exists (a fixed point).
+
+Each iteration strictly decreases the integer edge cut, so termination is
+guaranteed.  The batch scheme has weaker hill-climbing than the scalar
+FM-style queue (no tentative negative-gain moves), which is why
+``sneap_partition`` accepts both engines and the tests hold the vec cut to
+a small tolerance of the scalar cut rather than equality.
+
+For large k the dense per-partition degree matrix is also expressible as
+``A @ onehot(part)`` — a tiled one-hot matmul the MXU eats for breakfast;
+``repro.kernels.gain_eval`` implements exactly that and is used here when
+running on TPU with a graph small enough to densify (coarse levels).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import Graph, edge_cut, partition_weights
+from .refine import project, refine_level
+
+__all__ = ["partition_degrees", "refine_level_vec", "uncoarsen_vec"]
+
+# Small-problem delegation bounds.  At few partitions the batched
+# positive-gain passes stall in local optima that the scalar FM queue
+# escapes (it tries negative-gain moves and undoes the failures), and the
+# queue is cheap there — so `uncoarsen_vec` hands levels with
+# n * k <= _SCALAR_NK and k <= _SCALAR_MAX_K to the scalar refiner.  Both
+# bounds matter: FM's per-move cost grows with k (a bincount plus a sort
+# of the k-wide degree vector per queue operation), so delegating a
+# many-partition level would burn the very speedup this module exists for.
+_SCALAR_NK = 1 << 20
+_SCALAR_MAX_K = 64
+
+# Densifying the adjacency for the gain_eval kernel is only worthwhile on
+# TPU and only for graphs whose dense (n, n) form fits comfortably in HBM.
+_KERNEL_MAX_N = 4096
+_KERNEL_MIN_K = 64
+
+# Cap on boundary_rows * k entries materialized at once by the numpy path
+# (~128 MB of float64); larger boundaries are swept in row chunks.
+_MAX_DEG_ENTRIES = 16_000_000
+
+
+def _row_edges(graph: Graph, rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Gather the CSR edges of ``rows``: (edge index array, local row id array)."""
+    xadj = graph.xadj
+    counts = (xadj[rows + 1] - xadj[rows]).astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+    # Ranges-to-indices: start of each row repeated, plus a within-row ramp.
+    starts = np.repeat(xadj[rows], counts)
+    ramp = np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(counts) - counts, counts
+    )
+    local = np.repeat(np.arange(rows.shape[0], dtype=np.int64), counts)
+    return starts + ramp, local
+
+
+def partition_degrees(
+    graph: Graph,
+    part: np.ndarray,
+    k: int,
+    rows: np.ndarray | None = None,
+) -> np.ndarray:
+    """(R, k) weighted histogram of neighbor partitions for each row vertex.
+
+    Column ``part[v]`` of row v holds v's internal degree; every other
+    column b holds the external degree ED[v]_b.  ``rows=None`` computes all
+    n rows (the issue's one-shot formula); passing the boundary-vertex
+    subset keeps the matrix small on fine levels.
+    """
+    if rows is None:
+        rows = np.arange(graph.num_vertices, dtype=np.int64)
+    eidx, local = _row_edges(graph, rows)
+    deg = np.bincount(
+        local * k + part[graph.adjncy[eidx]].astype(np.int64),
+        weights=graph.adjwgt[eidx],
+        minlength=rows.shape[0] * k,
+    )
+    return deg.reshape(rows.shape[0], k)
+
+
+def _dense_adjacency(graph: Graph) -> np.ndarray:
+    """(n, n) f32 dense adjacency for the gain_eval kernel path."""
+    n = graph.num_vertices
+    adj = np.zeros((n, n), dtype=np.float32)
+    src = np.repeat(np.arange(n), np.diff(graph.xadj))
+    adj[src, graph.adjncy] = graph.adjwgt
+    return adj
+
+
+def _degrees_via_kernel(adj: np.ndarray, part: np.ndarray, k: int,
+                        rows: np.ndarray, backend: str) -> np.ndarray:
+    """Row-subset degrees via the gain_eval tiled one-hot matmul kernel."""
+    import jax.numpy as jnp
+
+    from repro.kernels.gain_eval import part_degrees
+
+    deg = part_degrees(jnp.asarray(adj), jnp.asarray(part, jnp.int32), k,
+                       backend=backend)
+    return np.asarray(deg, dtype=np.float64)[rows]
+
+
+def refine_level_vec(
+    graph: Graph,
+    part: np.ndarray,
+    k: int,
+    capacity: int,
+    max_iters: int = 200,
+    use_kernel: bool | None = None,
+    kernel_backend: str = "auto",
+) -> tuple[np.ndarray, int]:
+    """Refine ``part`` by batched positive-gain moves; returns (part, cut).
+
+    ``use_kernel=None`` auto-enables the gain_eval Pallas path on TPU for
+    levels small enough to densify — and only when the total edge weight
+    fits in float32's exact-integer range (< 2^24), since the kernel
+    accumulates spike counts in f32 and the incremental cut bookkeeping
+    demands exact integer gains.  True forces it (tests run it in
+    interpret mode via ``kernel_backend="interpret"``), False keeps the
+    pure-numpy (exact float64) bincount path.
+    """
+    part = part.astype(np.int64).copy()
+    n = graph.num_vertices
+    xadj, adjncy, adjwgt, vwgt = graph.xadj, graph.adjncy, graph.adjwgt, graph.vwgt
+    pweight = partition_weights(graph, part, k)
+    cut = edge_cut(graph, part)
+    if graph.adjncy.shape[0] == 0:
+        return part, cut
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(xadj))
+    nbr = adjncy.astype(np.int64)
+    if use_kernel is None:
+        use_kernel = False
+        if (n <= _KERNEL_MAX_N and k >= _KERNEL_MIN_K
+                and int(adjwgt.sum()) < (1 << 24)):
+            try:
+                import jax
+
+                use_kernel = jax.default_backend() == "tpu"
+            except Exception:
+                use_kernel = False
+
+    adj_dense = _dense_adjacency(graph) if use_kernel else None
+    chunk = max(1, _MAX_DEG_ENTRIES // max(k, 1))
+    # Cached per-vertex move state.  A cached (gain, target) stays exact
+    # until a neighbor moves (gains depend only on neighbor partitions) or
+    # the vertex itself moves, so each iteration only re-evaluates the
+    # "active" set: last batch's movers plus their neighborhoods.
+    gain_full = np.full(n, -np.inf)
+    target_full = np.full(n, -1, dtype=np.int64)
+    mask = np.zeros(n, dtype=bool)
+    on_cut = part[src] != part[nbr]
+    if not on_cut.any():
+        return part, cut
+    mask[src[on_cut]] = True
+    active = np.nonzero(mask)[0]
+    refreshed = False  # True after a full re-evaluation of stale candidates
+
+    for _ in range(max_iters):
+        # Re-evaluate active rows in chunks so the (rows, k) degree matrix
+        # stays within the memory cap.  Targets are chosen by gain alone;
+        # capacity is enforced exactly at admission time below (a full
+        # feasibility mask here would double the per-iteration (rows, k)
+        # work for a constraint that rarely binds under the k slack).
+        for lo in range(0, active.shape[0], chunk):
+            rows_v = active[lo:lo + chunk]
+            if use_kernel:
+                deg = _degrees_via_kernel(adj_dense, part, k, rows_v,
+                                          kernel_backend)
+            else:
+                deg = partition_degrees(graph, part, k, rows=rows_v)
+            own = part[rows_v]
+            rows = np.arange(rows_v.shape[0])
+            internal = deg[rows, own]  # advanced indexing: already a copy
+            deg[rows, own] = -np.inf
+            t = np.argmax(deg, axis=1)
+            target_full[rows_v] = t
+            gain_full[rows_v] = deg[rows, t] - internal
+        is_cand = gain_full > 0
+        cand_idx = np.nonzero(is_cand)[0]
+        if cand_idx.shape[0] == 0:
+            break
+
+        # One Luby round: a candidate is suppressed by any adjacent candidate
+        # with strictly higher (gain, -id) priority.  Survivors are an
+        # independent set, so their gains are exact and additive.  Only the
+        # candidates' own adjacency rows are scanned, not all m edges.
+        eidx, local = _row_edges(graph, cand_idx)
+        u = cand_idx[local]
+        v = nbr[eidx]
+        conflict = is_cand[v]
+        u, v = u[conflict], v[conflict]
+        beaten = (gain_full[v] > gain_full[u]) | (
+            (gain_full[v] == gain_full[u]) & (v < u)
+        )
+        suppressed = np.zeros(n, dtype=bool)
+        suppressed[u[beaten]] = True
+        movers = cand_idx[~suppressed[cand_idx]]
+        if movers.shape[0] == 0:  # unreachable: the max-priority candidate survives
+            break
+
+        # Capacity admission: per target partition, admit in gain order while
+        # the cumulative moved weight fits in the pre-batch headroom.
+        mt = target_full[movers]
+        mg = gain_full[movers]
+        order = np.lexsort((movers, -mg, mt))
+        movers, mt, mg = movers[order], mt[order], mg[order]
+        mw = vwgt[movers]
+        cw = np.cumsum(mw)
+        new_grp = np.empty(movers.shape[0], dtype=bool)
+        new_grp[0] = True
+        new_grp[1:] = mt[1:] != mt[:-1]
+        grp_starts = np.nonzero(new_grp)[0]
+        grp_sizes = np.diff(np.append(grp_starts, movers.shape[0]))
+        within = cw - np.repeat(cw[grp_starts] - mw[grp_starts], grp_sizes)
+        admit = within <= capacity - pweight[mt]
+        moved, dest, moved_gain = movers[admit], mt[admit], mg[admit]
+        if moved.shape[0] == 0:
+            # Every candidate was admission-rejected under the *current*
+            # partition weights; their cached targets may be stale.  Refresh
+            # them all once, then give up if still stuck.
+            if refreshed:
+                break
+            refreshed = True
+            active = np.nonzero(is_cand)[0]
+            continue
+        refreshed = False
+
+        np.subtract.at(pweight, part[moved], vwgt[moved])
+        np.add.at(pweight, dest, vwgt[moved])
+        part[moved] = dest
+        cut -= int(round(moved_gain.sum()))
+
+        # Next active set: the movers and everything adjacent to one.
+        eidx, _ = _row_edges(graph, moved)
+        mask[:] = False
+        mask[moved] = True
+        mask[adjncy[eidx]] = True
+        active = np.nonzero(mask)[0]
+    return part, cut
+
+
+def uncoarsen_vec(
+    levels: list[Graph],
+    coarse_part: np.ndarray,
+    k: int,
+    capacity: int,
+    max_nonimproving: int = 64,
+    use_kernel: bool | None = None,
+    scalar_nk: int = _SCALAR_NK,
+    scalar_max_k: int = _SCALAR_MAX_K,
+) -> tuple[np.ndarray, int]:
+    """Walk levels coarse->fine, refining each level with whichever engine
+    its shape favors: the scalar FM queue for small few-partition levels
+    (see _SCALAR_NK/_SCALAR_MAX_K), the batched vec refiner otherwise.
+    ``max_nonimproving`` applies to the scalar-delegated levels."""
+
+    def refine(g: Graph, p: np.ndarray) -> tuple[np.ndarray, int]:
+        if k <= scalar_max_k and g.num_vertices * k <= scalar_nk:
+            return refine_level(g, p, k, capacity, max_nonimproving)
+        return refine_level_vec(g, p, k, capacity, use_kernel=use_kernel)
+
+    part, cut = refine(levels[-1], coarse_part)
+    for fine, coarse in zip(reversed(levels[:-1]), reversed(levels[1:])):
+        part = project(part, coarse.cmap)
+        part, cut = refine(fine, part)
+    return part, cut

@@ -7,6 +7,7 @@ and by batch-evaluating entire SA swap neighborhoods on the MXU.
 
   hop_eval   — Algorithm 1: traffic x Manhattan-distance reduction.
   swap_delta — all-pairs SA swap deltas via a fused S @ D matmul epilogue.
+  gain_eval  — dense (n, k) refinement degrees/gains via one-hot matmul.
   lif_step   — LIF membrane update + spike detect (profiling hot spot).
   link_load  — per-link XY load histogram (edge variance / congestion).
 

@@ -1,0 +1,4 @@
+from .ops import gain_matrix, part_degrees
+from .ref import gain_matrix_ref, part_degrees_ref
+
+__all__ = ["part_degrees", "gain_matrix", "part_degrees_ref", "gain_matrix_ref"]

@@ -1,0 +1,47 @@
+"""Public wrappers: per-partition degree and gain matrix evaluation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import part_degrees_pallas
+from .ref import gain_matrix_ref, part_degrees_ref, part_onehot
+
+__all__ = ["part_degrees", "gain_matrix"]
+
+
+def part_degrees(
+    adj: jnp.ndarray,
+    part: jnp.ndarray,
+    k: int,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """(n, k) f32 per-partition degrees D[v, b] = sum_{u: part[u]=b} adj[v, u]."""
+    if backend == "jnp":
+        return part_degrees_ref(adj, part, k)
+    if backend == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        return part_degrees_pallas(adj, part, k, interpret=not on_tpu)
+    if backend == "pallas":
+        return part_degrees_pallas(adj, part, k, interpret=False)
+    if backend == "interpret":
+        return part_degrees_pallas(adj, part, k, interpret=True)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def gain_matrix(
+    adj: jnp.ndarray,
+    part: jnp.ndarray,
+    k: int,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """(n, k) f32 move gains (D minus own-column internal degree, 0 on own).
+
+    The matmul dominates, so only the degree evaluation is kernelized; the
+    gain epilogue is cheap O(nk) elementwise jnp shared by all backends.
+    """
+    if backend == "jnp":
+        return gain_matrix_ref(adj, part, k)
+    deg = part_degrees(adj, part, k, backend=backend)
+    own = jnp.take_along_axis(deg, part[:, None].astype(jnp.int32), axis=1)
+    return (deg - own) * (1.0 - part_onehot(part, k))

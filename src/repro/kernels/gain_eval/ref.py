@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the dense per-partition degree / gain matrices.
+
+For a dense weighted adjacency A (n, n) and a partition vector p (n,),
+the per-partition degree matrix is the one-hot matmul
+
+    D = A @ onehot(p)          D[v, b] = sum of w(v, u) over u with p[u] = b
+
+Column p[v] of row v is v's internal degree ID[v]; every other column is
+the external degree ED[v]_b.  The move gain used by the batched refiner
+(`repro.core.refine_vec`) is then pure elementwise arithmetic:
+
+    gain[v, b] = D[v, b] - D[v, p[v]]     (0 in the own column)
+
+This is the matrix form of the scalar refiner's per-vertex
+``np.bincount`` — lifted so the Pallas kernel can evaluate every vertex
+against every partition as a tiled MXU matmul.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["part_onehot", "part_degrees_ref", "gain_matrix_ref"]
+
+
+def part_onehot(part: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(n, k) f32 one-hot of the partition vector."""
+    return (part[:, None] == jnp.arange(k, dtype=part.dtype)[None, :]).astype(
+        jnp.float32
+    )
+
+
+def part_degrees_ref(adj: jnp.ndarray, part: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(n, k) f32 per-partition degree matrix D = A @ onehot(p)."""
+    return adj.astype(jnp.float32) @ part_onehot(part, k)
+
+
+def gain_matrix_ref(adj: jnp.ndarray, part: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(n, k) f32 move gains; own column is exactly zero."""
+    deg = part_degrees_ref(adj, part, k)
+    own = jnp.take_along_axis(deg, part[:, None].astype(jnp.int32), axis=1)
+    gains = deg - own
+    return gains * (1.0 - part_onehot(part, k))

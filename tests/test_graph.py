@@ -1,5 +1,6 @@
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import build_graph, edge_cut, partition_weights, validate_partition

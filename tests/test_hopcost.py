@@ -1,4 +1,7 @@
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hopcost import (average_hop, core_coords, hop_distance_matrix,

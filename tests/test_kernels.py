@@ -3,10 +3,12 @@ sweeping shapes and dtypes as required for every Pallas kernel."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hopcost import hop_distance_matrix, swap_delta
 from repro.core.mapping import pad_traffic
+from repro.kernels.gain_eval import part_degrees, part_degrees_ref
 from repro.kernels.hop_eval import hop_cost, hop_cost_ref
 from repro.kernels.lif_step import lif_step, lif_step_ref
 from repro.kernels.link_load import link_loads, link_loads_ref
@@ -76,6 +78,33 @@ def test_swap_deltas_diagonal_zero():
     out = np.asarray(swap_deltas(jnp.asarray(sym), jnp.asarray(x), jnp.asarray(y),
                                  backend="interpret"))
     np.testing.assert_allclose(np.diag(out), 0.0, atol=1e-3)
+
+
+# -------------------------------------------------------------- gain_eval
+
+@pytest.mark.parametrize("n,k", [(1, 1), (7, 3), (128, 128), (200, 60), (513, 130)])
+def test_gain_eval_shapes(n, k):
+    a = RNG.integers(0, 40, (n, n)).astype(np.float32)
+    a = a + a.T
+    np.fill_diagonal(a, 0)
+    p = RNG.integers(0, k, n).astype(np.int32)
+    ref = part_degrees_ref(jnp.asarray(a), jnp.asarray(p), k)
+    pal = part_degrees(jnp.asarray(a), jnp.asarray(p), k, backend="interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), rtol=1e-5)
+
+
+@given(n=st.integers(2, 50), k=st.integers(1, 20), seed=st.integers(0, 999))
+@settings(max_examples=15, deadline=None)
+def test_gain_eval_property(n, k, seed):
+    """Row sums of the degree matrix equal the vertex's total edge weight."""
+    r = np.random.default_rng(seed)
+    a = r.integers(0, 9, (n, n)).astype(np.float32)
+    a = a + a.T
+    np.fill_diagonal(a, 0)
+    p = r.integers(0, k, n).astype(np.int32)
+    deg = np.asarray(part_degrees(jnp.asarray(a), jnp.asarray(p), k,
+                                  backend="interpret"))
+    np.testing.assert_allclose(deg.sum(axis=1), a.sum(axis=1), rtol=1e-5)
 
 
 # -------------------------------------------------------------- lif_step

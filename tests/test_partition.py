@@ -1,5 +1,6 @@
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.baselines import greedy_kl_partition, sco_partition

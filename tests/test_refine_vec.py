@@ -1,0 +1,190 @@
+"""Vec partitioning engine: matching/refinement invariants, scalar parity,
+and the gain_eval kernel vs its reference (no hypothesis required)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coarsen import coarsen, heavy_edge_matching_vec
+from repro.core.graph import edge_cut, partition_weights, validate_partition
+from repro.core.partition import sneap_partition
+from repro.core.refine_vec import partition_degrees, refine_level_vec, uncoarsen_vec
+from repro.kernels.gain_eval import (
+    gain_matrix,
+    gain_matrix_ref,
+    part_degrees,
+    part_degrees_ref,
+)
+
+from conftest import random_graph
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------ matching (vec)
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_matching_vec_symmetric(seed):
+    g = random_graph(150, 0.08, seed=seed)
+    match = heavy_edge_matching_vec(g, np.random.default_rng(seed))
+    assert np.array_equal(match[match], np.arange(150))
+
+
+def test_matching_vec_respects_cap():
+    g = random_graph(100, 0.1, seed=3)
+    # All vertex weights are 1, so a cap of 1 forbids every merge.
+    match = heavy_edge_matching_vec(g, np.random.default_rng(0), max_vwgt=1)
+    assert np.array_equal(match, np.arange(100))
+
+
+def test_matching_vec_matches_most_vertices():
+    g = random_graph(400, 0.05, seed=4)
+    match = heavy_edge_matching_vec(g, np.random.default_rng(0))
+    assert (match != np.arange(400)).mean() > 0.5
+
+
+def test_coarsen_vec_preserves_totals():
+    g = random_graph(300, 0.05, seed=5)
+    levels = coarsen(g, np.random.default_rng(0), coarsen_to=32, impl="vec")
+    sizes = [lv.num_vertices for lv in levels]
+    assert sizes == sorted(sizes, reverse=True) and len(levels) > 1
+    assert all(lv.total_vwgt == g.total_vwgt for lv in levels)
+
+
+def test_coarsen_rejects_unknown_impl():
+    g = random_graph(20, 0.2, seed=6)
+    with pytest.raises(ValueError):
+        coarsen(g, np.random.default_rng(0), impl="simd")
+
+
+# -------------------------------------------------- refinement (vec)
+
+def test_partition_degrees_matches_bincount():
+    g = random_graph(120, 0.1, seed=7)
+    k = 8
+    part = RNG.integers(0, k, 120).astype(np.int64)
+    src = np.repeat(np.arange(120), np.diff(g.xadj))
+    ref = np.bincount(src * k + part[g.adjncy], weights=g.adjwgt,
+                      minlength=120 * k).reshape(120, k)
+    np.testing.assert_allclose(partition_degrees(g, part, k), ref)
+    rows = np.array([3, 50, 117])
+    np.testing.assert_allclose(partition_degrees(g, part, k, rows=rows), ref[rows])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_refine_level_vec_invariants(seed):
+    """Cut never increases, bookkeeping stays exact, capacity holds."""
+    n, k, cap = 200, 10, 32
+    g = random_graph(n, 0.06, seed=seed)
+    part = (np.arange(n) % k).astype(np.int64)
+    c0 = edge_cut(g, part)
+    out, cut = refine_level_vec(g, part, k, cap)
+    assert cut <= c0
+    assert cut == edge_cut(g, out)
+    assert (partition_weights(g, out, k) <= cap).all()
+    # Input partition is not mutated.
+    assert np.array_equal(part, (np.arange(n) % k))
+
+
+def test_refine_level_vec_deterministic():
+    g = random_graph(150, 0.08, seed=9)
+    part = (np.arange(150) % 8).astype(np.int64)
+    a, ca = refine_level_vec(g, part, 8, 32)
+    b, cb = refine_level_vec(g, part, 8, 32)
+    assert np.array_equal(a, b) and ca == cb
+
+
+def test_refine_level_vec_kernel_path_parity():
+    """Interpret-mode gain_eval path produces the numpy path's result."""
+    g = random_graph(120, 0.1, seed=10)
+    part = (np.arange(120) % 6).astype(np.int64)
+    p_np, c_np = refine_level_vec(g, part, 6, 32, use_kernel=False)
+    p_kn, c_kn = refine_level_vec(g, part, 6, 32, use_kernel=True,
+                                  kernel_backend="interpret")
+    assert np.array_equal(p_np, p_kn) and c_np == c_kn
+
+
+def test_uncoarsen_vec_end_to_end():
+    g = random_graph(300, 0.05, seed=11)
+    k, cap = 12, 40
+    rng = np.random.default_rng(0)
+    levels = coarsen(g, rng, coarsen_to=4 * k, max_vwgt=cap // 3, impl="vec")
+    from repro.core.initpart import greedy_region_growing
+
+    coarse_part = greedy_region_growing(levels[-1], k, cap, rng)
+    part, cut = uncoarsen_vec(levels, coarse_part, k, cap)
+    validate_partition(g, part, k, cap)
+    assert cut == edge_cut(g, part)
+
+
+# --------------------------------------------- sneap_partition impl=vec
+
+def test_sneap_vec_valid_and_deterministic():
+    # n >= 1024 so the adaptive floor routes to the real vec engine.
+    g = random_graph(1200, 0.015, seed=12)
+    a = sneap_partition(g, capacity=64, seed=5, impl="vec")
+    b = sneap_partition(g, capacity=64, seed=5, impl="vec")
+    validate_partition(g, a.part, a.k, 64)
+    assert np.array_equal(a.part, b.part) and a.edge_cut == b.edge_cut
+    assert a.impl == "vec"
+
+
+def test_sneap_vec_cut_near_scalar():
+    g = random_graph(1500, 0.01, seed=13)
+    s = sneap_partition(g, capacity=64, seed=0, impl="scalar")
+    v = sneap_partition(g, capacity=64, seed=0, impl="vec")
+    assert v.edge_cut <= 1.10 * s.edge_cut
+
+
+def test_sneap_vec_small_graph_routes_scalar():
+    g = random_graph(200, 0.08, seed=14)
+    s = sneap_partition(g, capacity=32, seed=0, impl="scalar")
+    v = sneap_partition(g, capacity=32, seed=0, impl="vec")
+    assert np.array_equal(s.part, v.part) and s.edge_cut == v.edge_cut
+    assert v.impl == "vec" and s.impl == "scalar"
+
+
+def test_sneap_rejects_unknown_impl():
+    g = random_graph(50, 0.2, seed=15)
+    with pytest.raises(ValueError):
+        sneap_partition(g, capacity=32, impl="gpu")
+
+
+# ------------------------------------------------- gain_eval kernel
+
+@pytest.mark.parametrize("n,k", [(16, 3), (130, 25), (256, 128), (300, 140)])
+def test_gain_eval_degrees_interpret_vs_ref(n, k):
+    a = RNG.integers(0, 50, (n, n)).astype(np.float32)
+    a = a + a.T
+    np.fill_diagonal(a, 0)
+    p = RNG.integers(0, k, n).astype(np.int32)
+    ref = part_degrees_ref(jnp.asarray(a), jnp.asarray(p), k)
+    pal = part_degrees(jnp.asarray(a), jnp.asarray(p), k, backend="interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), rtol=1e-5)
+
+
+def test_gain_eval_gains_interpret_vs_ref():
+    n, k = 90, 11
+    a = RNG.integers(0, 30, (n, n)).astype(np.float32)
+    a = a + a.T
+    np.fill_diagonal(a, 0)
+    p = RNG.integers(0, k, n).astype(np.int32)
+    ref = gain_matrix_ref(jnp.asarray(a), jnp.asarray(p), k)
+    pal = gain_matrix(jnp.asarray(a), jnp.asarray(p), k, backend="interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), rtol=1e-5)
+    # Own column is exactly zero: staying put gains nothing.
+    np.testing.assert_array_equal(
+        np.asarray(pal)[np.arange(n), p], np.zeros(n, np.float32)
+    )
+
+
+def test_gain_eval_degrees_match_csr_bincount():
+    """The dense kernel agrees with the CSR partition_degrees used on CPU."""
+    g = random_graph(80, 0.15, seed=16)
+    k = 9
+    part = RNG.integers(0, k, 80).astype(np.int64)
+    adj = np.zeros((80, 80), dtype=np.float32)
+    src = np.repeat(np.arange(80), np.diff(g.xadj))
+    adj[src, g.adjncy] = g.adjwgt
+    dense = part_degrees(jnp.asarray(adj), jnp.asarray(part, jnp.int32), k,
+                         backend="interpret")
+    np.testing.assert_allclose(np.asarray(dense), partition_degrees(g, part, k))

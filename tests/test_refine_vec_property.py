@@ -1,0 +1,59 @@
+"""Property tests for the vec partitioning engine (skip without hypothesis)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip when absent
+from hypothesis import given, settings, strategies as st
+
+from repro.core.coarsen import heavy_edge_matching_vec
+from repro.core.graph import edge_cut, partition_weights, validate_partition
+from repro.core.partition import sneap_partition
+from repro.core.refine_vec import refine_level_vec
+
+from conftest import random_graph
+
+
+@given(n=st.integers(20, 150), p=st.floats(0.05, 0.3), seed=st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_matching_vec_property(n, p, seed):
+    """Matching is an involution and respects the merged-weight cap."""
+    g = random_graph(n, p, seed=seed)
+    cap = 2  # unit vertex weights: every merge is allowed, at most pairs
+    match = heavy_edge_matching_vec(g, np.random.default_rng(seed), max_vwgt=cap)
+    assert np.array_equal(match[match], np.arange(n))
+    merged = g.vwgt + g.vwgt[match]
+    paired = match != np.arange(n)
+    assert (merged[paired] <= cap).all()
+
+
+@given(n=st.integers(30, 150), p=st.floats(0.05, 0.25), seed=st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_refine_vec_property(n, p, seed):
+    """Batched refinement: valid result, capacity kept, cut non-increasing
+    and consistent, deterministic under a fixed input."""
+    g = random_graph(n, p, seed=seed)
+    k = max(3, n // 20)
+    cap = max(8, 2 * (n // k))
+    part = (np.arange(n) % k).astype(np.int64)
+    c0 = edge_cut(g, part)
+    out, cut = refine_level_vec(g, part, k, cap)
+    assert cut <= c0
+    assert cut == edge_cut(g, out)
+    assert out.min() >= 0 and out.max() < k
+    assert (partition_weights(g, out, k) <= cap).all()
+    out2, cut2 = refine_level_vec(g, part, k, cap)
+    assert np.array_equal(out, out2) and cut == cut2
+
+
+@given(n=st.integers(20, 120), p=st.floats(0.05, 0.3), seed=st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_sneap_vec_parity_property(n, p, seed):
+    """impl="vec" is validate_partition-clean and, under the adaptive
+    small-graph floor, exactly matches the scalar engine here."""
+    g = random_graph(n, p, seed=seed)
+    cap = max(8, n // 6)
+    s = sneap_partition(g, capacity=cap, seed=seed, impl="scalar")
+    v = sneap_partition(g, capacity=cap, seed=seed, impl="vec")
+    validate_partition(g, v.part, v.k, cap)
+    assert v.edge_cut == edge_cut(g, v.part)
+    assert np.array_equal(s.part, v.part) and s.edge_cut == v.edge_cut
