@@ -1,19 +1,29 @@
 """Paper Fig. 4: partitioning-phase global traffic + execution time,
 SNEAP (multilevel) vs SpiNeMap (greedy KL), normalized to SpiNeMap.
 
-Also tracks the scalar-vs-vec partitioning engines (`sneap_partition`'s
-`impl` switch): cut parity and wall-clock on the paper SNNs, plus a
->=100k-neuron synthetic graph where the array-parallel engine's >=10x
-speedup is the headline (BENCH_* trajectory `partition_impl/*`).
+Also tracks:
+  * the scalar-vs-vec partitioning engines (`sneap_partition`'s `impl`
+    switch): cut parity and wall-clock on the paper SNNs, plus a >=100k
+    neuron synthetic graph where the array-parallel engine's >=10x speedup
+    is the headline (BENCH_* trajectory `partition_impl/*`); and
+  * the cut-vs-volume objectives (`objective` switch): communication
+    volume and edge cut of both partitions on each SNN, i.e. how much
+    multicast traffic the hMETIS-style connectivity-(λ−1) objective saves
+    over the paper's edge-cut objective (trajectory `objective/*`).
+
+``--smoke`` runs a single small SNN + a small synthetic graph — quick
+enough for CI, so objective regressions surface there and not just
+locally.
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
 
 from repro.core import greedy_kl_partition, sneap_partition
-from repro.core.graph import build_graph
+from repro.core.graph import build_graph, build_hypergraph
 
 from .common import emit, get_profile, scale
 
@@ -21,6 +31,7 @@ from .common import emit, get_profile, scale
 # measured; full mode doubles the synaptic density.
 SYNTH_QUICK = dict(n=100_000, avg_deg=8)
 SYNTH_FULL = dict(n=120_000, avg_deg=16)
+SYNTH_SMOKE = dict(n=20_000, avg_deg=8)
 
 
 def synthetic_graph(n: int, avg_deg: int, seed: int = 0, max_w: int = 50):
@@ -31,9 +42,47 @@ def synthetic_graph(n: int, avg_deg: int, seed: int = 0, max_w: int = 50):
                        r.integers(1, max_w, m))
 
 
-def run(full: bool = False) -> list[dict]:
+def synthetic_fanout_graph(n: int, fan: int = 12, seed: int = 0):
+    """Fan-out-heavy traffic with the multicast hypergraph attached —
+    the regime where cut and volume objectives diverge most."""
+    r = np.random.default_rng(seed)
+    src = np.repeat(np.arange(n), fan)
+    dst = r.integers(0, n, n * fan)
+    fire = r.integers(1, 30, n)
+    g = build_graph(n, src, dst, fire[src])
+    g.hyper = build_hypergraph(n, src, dst, fire)
+    return g
+
+
+def objective_row(name: str, graph, capacity: int = 256, cut=None) -> dict:
+    """One cut-vs-volume comparison row over an attached hypergraph.
+
+    ``cut`` reuses an already-computed scalar cut-objective result
+    (identical arguments) instead of re-running the slowest phase.
+    """
+    if cut is None:
+        cut = sneap_partition(graph, capacity=capacity, seed=0, objective="cut")
+    t_cut = cut.seconds
+    t0 = time.perf_counter()
+    vol = sneap_partition(graph, capacity=capacity, seed=0, objective="volume")
+    t_vol = time.perf_counter() - t0
+    saved = 1 - vol.comm_volume / max(cut.comm_volume, 1)
+    return {
+        "name": f"objective/{name}",
+        "us_per_call": round(t_vol * 1e6, 1),
+        "derived": (
+            f"cut_of_cutopt={cut.edge_cut};vol_of_cutopt={cut.comm_volume};"
+            f"cut_of_volopt={vol.edge_cut};vol_of_volopt={vol.comm_volume};"
+            f"volume_saved={saved:.3f};"
+            f"time_cut_s={t_cut:.3f};time_vol_s={t_vol:.3f};k={vol.k}"
+        ),
+    }
+
+
+def run(full: bool = False, smoke: bool = False) -> list[dict]:
     rows = []
-    for snn in scale(full)["snns"]:
+    snns = ["smooth_320"] if smoke else scale(full)["snns"]
+    for snn in snns:
         prof = get_profile(snn, full)
         sneap = sneap_partition(prof.graph, capacity=256, seed=0)
         vec = sneap_partition(prof.graph, capacity=256, seed=0, impl="vec")
@@ -59,10 +108,16 @@ def run(full: bool = False) -> list[dict]:
                 f"speedup={sneap.seconds / max(vec.seconds, 1e-9):.1f}x;k={vec.k}"
             ),
         })
+        rows.append(objective_row(snn, prof.graph, cut=sneap))
+
+    # Fan-out-heavy synthetic hypergraph: where volume optimization pays.
+    fan_n = 1000 if smoke else 4000
+    rows.append(objective_row(f"fanout_{fan_n}",
+                              synthetic_fanout_graph(fan_n), capacity=64))
 
     # Large synthetic graph: the scale where the scalar engine's per-vertex
     # Python loops become impractical and the vec engine must deliver >=10x.
-    cfg = SYNTH_FULL if full else SYNTH_QUICK
+    cfg = SYNTH_SMOKE if smoke else (SYNTH_FULL if full else SYNTH_QUICK)
     g = synthetic_graph(**cfg)
     t0 = time.perf_counter()
     vec = sneap_partition(g, capacity=256, seed=0, impl="vec")
@@ -81,9 +136,13 @@ def run(full: bool = False) -> list[dict]:
             f"speedup={t_scalar / max(t_vec, 1e-9):.1f}x;k={vec.k}"
         ),
     })
-    emit(rows, "Fig4: partitioning traffic + time (SNEAP vs greedy-KL; scalar vs vec)")
+    emit(rows, "Fig4: partitioning traffic + time "
+               "(SNEAP vs greedy-KL; scalar vs vec; cut vs volume)")
     return rows
 
 
 if __name__ == "__main__":
-    run(full=True)
+    if "--smoke" in sys.argv:
+        run(smoke=True)
+    else:
+        run(full="--quick" not in sys.argv)

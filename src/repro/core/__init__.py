@@ -1,19 +1,32 @@
 """SNEAP core: the paper's contribution.
 
-Partitioning (multilevel graph partitioning minimizing inter-partition
-spikes), mapping (SA/PSO/Tabu placement minimizing average hop under XY
-routing), analytic hop evaluation (Algorithm 1), baselines (SpiNeMap,
-SCO), and the end-to-end toolchain pipeline.
+Partitioning (multilevel graph/hypergraph partitioning minimizing either
+inter-partition spikes or multicast communication volume), mapping
+(SA/PSO/Tabu placement minimizing average hop under XY routing), analytic
+hop evaluation (Algorithm 1), baselines (SpiNeMap, SCO), and the
+end-to-end toolchain pipeline.
 """
 from .baselines import greedy_kl_partition, sco_partition, sco_place
-from .graph import Graph, build_graph, edge_cut, partition_weights, validate_partition
+from .graph import (
+    Graph,
+    Hypergraph,
+    build_graph,
+    build_hypergraph,
+    comm_volume,
+    edge_cut,
+    partition_weights,
+    validate_partition,
+    volume_degrees,
+)
 from .hopcost import average_hop, core_coords, hop_distance_matrix, swap_delta, traffic_matrix
 from .mapping import MAPPERS, MappingResult, pso_search, sa_search, tabu_search
 from .partition import PartitionResult, sneap_partition
 from .pipeline import ToolchainResult, run_toolchain
 
 __all__ = [
-    "Graph", "build_graph", "edge_cut", "partition_weights", "validate_partition",
+    "Graph", "Hypergraph", "build_graph", "build_hypergraph",
+    "edge_cut", "comm_volume", "volume_degrees",
+    "partition_weights", "validate_partition",
     "average_hop", "core_coords", "hop_distance_matrix", "swap_delta", "traffic_matrix",
     "MAPPERS", "MappingResult", "pso_search", "sa_search", "tabu_search",
     "PartitionResult", "sneap_partition",

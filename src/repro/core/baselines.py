@@ -19,9 +19,10 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .graph import Graph, edge_cut, partition_weights, validate_partition
+from .graph import Graph, comm_volume, edge_cut, partition_weights, validate_partition
 from .mapping import MappingResult, pso_search
 from .partition import PartitionResult
+from .refine import CutState, VolumeState
 
 __all__ = ["greedy_kl_partition", "sco_partition", "sco_place"]
 
@@ -34,15 +35,19 @@ def greedy_kl_partition(
     max_passes: int = 8,
     slack: float = 1.10,
     max_k: int | None = None,
+    objective: str = "cut",
 ) -> PartitionResult:
     """SpiNeCluster: greedy KL on the uncoarsened graph.
 
     Every pass scans *all* vertices into per-partition priority queues and
     greedily applies the best gain moves until none improve.  Identical
-    objective to `sneap_partition` (minimize inter-partition spikes under
-    the capacity constraint) but no multilevel compression, so each pass is
-    O(n log n) on the full graph and many passes are needed.
+    objective to `sneap_partition` — ``"cut"`` (inter-partition spikes) or
+    ``"volume"`` (multicast communication volume) under the capacity
+    constraint — but no multilevel compression, so each pass is O(n log n)
+    on the full graph and many passes are needed.
     """
+    if objective not in ("cut", "volume"):
+        raise ValueError(f"unknown objective {objective!r}")
     t0 = time.perf_counter()
     rng = np.random.default_rng(seed)
     n = graph.num_vertices
@@ -58,16 +63,12 @@ def greedy_kl_partition(
     rng.shuffle(part)
     part = part.astype(np.int64)
     pweight = partition_weights(graph, part, k)
-    cut = edge_cut(graph, part)
+    state = (CutState if objective == "cut" else VolumeState)(graph, part, k)
+    cut = state.score(part)
     counter = itertools.count()
 
     def degrees(v: int) -> tuple[int, np.ndarray]:
-        nbrs, wgts = graph.neighbors(v)
-        per = np.bincount(part[nbrs], weights=wgts, minlength=k)
-        internal = per[part[v]]
-        per = per.copy()
-        per[part[v]] = 0
-        return int(internal), per
+        return state.degrees(part, v)
 
     for _ in range(max_passes):
         start_cut = cut
@@ -111,6 +112,7 @@ def greedy_kl_partition(
                 part[v] = int(b)
                 pweight[src] -= graph.vwgt[v]
                 pweight[b] += graph.vwgt[v]
+                state.apply_move(v, src, int(b))
                 cut -= gain
                 moved[v] = True
                 improved = True
@@ -119,16 +121,24 @@ def greedy_kl_partition(
             break
     seconds = time.perf_counter() - t0
     validate_partition(graph, part, k, capacity)
-    assert cut == edge_cut(graph, part)
-    return PartitionResult(part=part, k=k, edge_cut=cut, capacity=capacity,
-                           num_levels=1, seconds=seconds)
+    assert cut == state.score(part)
+    vol = comm_volume(graph.hyper, part) if graph.hyper is not None else None
+    return PartitionResult(
+        part=part, k=k, edge_cut=edge_cut(graph, part), capacity=capacity,
+        num_levels=1, seconds=seconds, objective=objective, comm_volume=vol,
+    )
 
 
-def sco_partition(graph: Graph, capacity: int = 256) -> PartitionResult:
+def sco_partition(graph: Graph, capacity: int = 256,
+                  objective: str = "cut") -> PartitionResult:
     """SCO: sequential packing — fill each core to capacity in neuron order.
 
-    Minimizes the number of cores used; ignores spike traffic entirely.
+    Minimizes the number of cores used; ignores spike traffic entirely
+    (``objective`` only selects which metric the result reports as its
+    optimization target — the packing is identical).
     """
+    if objective not in ("cut", "volume"):
+        raise ValueError(f"unknown objective {objective!r}")
     t0 = time.perf_counter()
     n = graph.num_vertices
     part = np.empty(n, dtype=np.int64)
@@ -142,8 +152,10 @@ def sco_partition(graph: Graph, capacity: int = 256) -> PartitionResult:
     k = p + 1
     seconds = time.perf_counter() - t0
     validate_partition(graph, part, k, capacity)
+    vol = comm_volume(graph.hyper, part) if graph.hyper is not None else None
     return PartitionResult(part=part, k=k, edge_cut=edge_cut(graph, part),
-                           capacity=capacity, num_levels=1, seconds=seconds)
+                           capacity=capacity, num_levels=1, seconds=seconds,
+                           objective=objective, comm_volume=vol)
 
 
 def sco_place(k: int, num_cores: int) -> MappingResult:

@@ -22,9 +22,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from .graph import Graph
+from .graph import Graph, Hypergraph
 
-__all__ = ["heavy_edge_matching", "heavy_edge_matching_vec", "contract", "coarsen"]
+__all__ = [
+    "heavy_edge_matching",
+    "heavy_edge_matching_vec",
+    "contract",
+    "contract_hypergraph",
+    "coarsen",
+]
 
 
 def heavy_edge_matching(graph: Graph, rng: np.random.Generator) -> np.ndarray:
@@ -75,6 +81,12 @@ def heavy_edge_matching_vec(
     round locks in O(1) pairs instead of O(n) (dense equal-weight layers
     degrade worst — mutual-proposal matching stalls outright there).
 
+    Each round runs a "second chance" pass: proposers that lost the
+    acceptance step (their target locked in a heavier proposer) re-propose
+    to their best *still unmatched* acceptor neighbor under the same role
+    split.  That recovers most of the matched-weight gap vs. the sequential
+    loop, which never wastes a visit on an already-taken neighbor.
+
     ``max_vwgt`` filters candidate edges up front so merged vertices never
     exceed the cap.
     """
@@ -89,7 +101,7 @@ def heavy_edge_matching_vec(
         # the (weight * n + vertex) acceptance key.
         if int(adjwgt.max()) >= min(1 << (62 - _TIE_BITS), (1 << 62) // max(n, 1)):
             raise OverflowError("edge weights too large for the packed match keys")
-        src = np.repeat(np.arange(n, dtype=np.int64), np.diff(xadj))
+        src = graph.edge_src
         nbr = adjncy.astype(np.int64)
         nonempty = xadj[:-1] < xadj[1:]
         starts = xadj[:-1][nonempty]
@@ -98,46 +110,93 @@ def heavy_edge_matching_vec(
             cap_ok = (vwgt[src] + vwgt[nbr]) <= max_vwgt
         for _ in range(max_rounds):
             free = match == -1
-            alive = free[src] & free[nbr] & cap_ok
-            if not alive.any():
+            if not (free[src] & free[nbr] & cap_ok).any():
                 break
             proposer = rng.random(n) < 0.5
-            ok = alive & proposer[src] & ~proposer[nbr]
-            if not ok.any():
-                continue  # unlucky coin flips; candidate edges still exist
-            # Lexicographic (weight, random tie) as one int64 key; CSR rows
-            # are contiguous, so one reduceat over non-empty rows is the
-            # whole segment-max.
-            key = np.where(
-                ok,
-                (adjwgt << _TIE_BITS) + rng.integers(0, 1 << _TIE_BITS, m),
-                -1,
-            )
-            rowmax = np.full(n, -1, dtype=np.int64)
-            rowmax[nonempty] = np.maximum.reduceat(key, starts)
-            hit = ok & (key == rowmax[src])
-            proposal = np.full(n, n, dtype=np.int64)
-            np.minimum.at(proposal, src[hit], nbr[hit])
-            prop_from = np.nonzero(proposal < n)[0]
-            # Acceptance: each target keeps its heaviest proposer; the
-            # (weight, proposer-id) key makes the winner recoverable as
-            # key % n.
-            pw = rowmax[prop_from] >> _TIE_BITS
-            acc = np.full(n, -1, dtype=np.int64)
-            np.maximum.at(acc, proposal[prop_from], pw * n + prop_from)
-            targets = np.nonzero(acc >= 0)[0]
-            winners = acc[targets] % n
-            match[targets] = winners
-            match[winners] = targets
+            # Two passes per round: the second gives proposers that lost the
+            # acceptance step a chance to re-propose to a still-free acceptor.
+            for _pass in range(2):
+                free = match == -1
+                ok = free[src] & free[nbr] & cap_ok & proposer[src] & ~proposer[nbr]
+                if not ok.any():
+                    break  # unlucky coin flips or round exhausted
+                # Lexicographic (weight, random tie) as one int64 key; CSR rows
+                # are contiguous, so one reduceat over non-empty rows is the
+                # whole segment-max.
+                key = np.where(
+                    ok,
+                    (adjwgt << _TIE_BITS) + rng.integers(0, 1 << _TIE_BITS, m),
+                    -1,
+                )
+                rowmax = np.full(n, -1, dtype=np.int64)
+                rowmax[nonempty] = np.maximum.reduceat(key, starts)
+                hit = ok & (key == rowmax[src])
+                proposal = np.full(n, n, dtype=np.int64)
+                np.minimum.at(proposal, src[hit], nbr[hit])
+                prop_from = np.nonzero(proposal < n)[0]
+                # Acceptance: each target keeps its heaviest proposer; the
+                # (weight, proposer-id) key makes the winner recoverable as
+                # key % n.
+                pw = rowmax[prop_from] >> _TIE_BITS
+                acc = np.full(n, -1, dtype=np.int64)
+                np.maximum.at(acc, proposal[prop_from], pw * n + prop_from)
+                targets = np.nonzero(acc >= 0)[0]
+                winners = acc[targets] % n
+                match[targets] = winners
+                match[winners] = targets
     unmatched = match == -1
     match[unmatched] = np.nonzero(unmatched)[0]
     return match
 
 
-def contract(graph: Graph, match: np.ndarray) -> Graph:
+def contract_hypergraph(hyper: Hypergraph, cmap: np.ndarray, nc: int) -> Hypergraph:
+    """Contract hyperedges through a fine→coarse vertex map.
+
+    Pins remap through ``cmap`` and merge within each hyperedge (weights
+    summed); pins that collapse into their own source are dropped (their
+    deliveries became core-local), as are hyperedges left with no pins.
+    Because a partition of the coarse graph induces the same member
+    partition sets, ``comm_volume`` is preserved exactly under projection —
+    which is what makes λ-gains exact at every level of refinement.
+    """
+    hsrc = cmap[hyper.hsrc.astype(np.int64)]
+    pins = cmap[hyper.hpins.astype(np.int64)]
+    pe = hyper.pin_edge
+    keep = pins != hsrc[pe]
+    pe, pins, wgt = pe[keep], pins[keep], hyper.hwgt[keep]
+
+    # Merge duplicate pins within each hyperedge (np.unique sorts the packed
+    # key, so merged pins come out grouped by hyperedge — CSR-ready).
+    key = pe * nc + pins
+    order = np.argsort(key, kind="stable")
+    key, wgt = key[order], wgt[order]
+    uniq, start = np.unique(key, return_index=True)
+    merged_w = np.add.reduceat(wgt, start) if len(key) else wgt
+    mpe = uniq // nc
+    mpins = uniq % nc
+
+    # Compact away empty hyperedges.
+    ne = hyper.num_hyperedges
+    counts = np.bincount(mpe, minlength=ne)
+    nonempty = counts > 0
+    hxadj = np.concatenate([[0], np.cumsum(counts[nonempty])]).astype(np.int64)
+    return Hypergraph(
+        hxadj=hxadj,
+        hpins=mpins.astype(np.int32),
+        hwgt=merged_w.astype(np.int64),
+        hsrc=hsrc[nonempty].astype(np.int32),
+        hfire=hyper.hfire[nonempty],
+        num_vertices=nc,
+    )
+
+
+def contract(graph: Graph, match: np.ndarray, contract_hyper: bool = True) -> Graph:
     """Contract matched pairs into the next-coarser graph.
 
-    Returns a Graph whose ``cmap`` maps fine vertices -> coarse vertices.
+    Returns a Graph whose ``cmap`` maps fine vertices -> coarse vertices;
+    an attached ``hyper`` view is contracted alongside unless
+    ``contract_hyper=False`` (the edge-cut objective never reads coarse
+    hypergraphs, so cut-path callers skip the per-level pin merge).
     """
     n = graph.num_vertices
     # Assign coarse ids: the lower-numbered endpoint of each pair owns the id.
@@ -148,7 +207,7 @@ def contract(graph: Graph, match: np.ndarray) -> Graph:
     cvwgt = np.zeros(nc, dtype=np.int64)
     np.add.at(cvwgt, cmap, graph.vwgt)
 
-    src = np.repeat(np.arange(n), np.diff(graph.xadj))
+    src = graph.edge_src
     csrc = cmap[src]
     cdst = cmap[graph.adjncy]
     keep = csrc != cdst  # internal (matched) edges disappear
@@ -172,6 +231,8 @@ def contract(graph: Graph, match: np.ndarray) -> Graph:
         adjwgt=merged_w.astype(np.int64),
         vwgt=cvwgt,
         cmap=cmap,
+        hyper=(contract_hypergraph(graph.hyper, cmap, nc)
+               if contract_hyper and graph.hyper is not None else None),
     )
 
 
@@ -183,6 +244,7 @@ def coarsen(
     shrink_floor: float = 0.95,
     max_levels: int = 40,
     impl: str = "scalar",
+    contract_hyper: bool = True,
 ) -> list[Graph]:
     """Coarsen level by level; returns [G_0, G_1, ..., G_c] (fine -> coarse).
 
@@ -191,7 +253,8 @@ def coarsen(
     ``max_vwgt`` bounds the merged vertex weight so that coarse vertices
     stay placeable within a core's neuron capacity.  ``impl`` selects the
     matching engine: ``"scalar"`` (sequential reference) or ``"vec"``
-    (round-based array-parallel matching).
+    (round-based array-parallel matching).  ``contract_hyper=False`` skips
+    the per-level hypergraph contraction (see ``contract``).
     """
     if impl not in ("scalar", "vec"):
         raise ValueError(f"unknown coarsening impl {impl!r}")
@@ -213,7 +276,7 @@ def coarsen(
             match[bad] = v[bad]
             partner_bad = bad[match]
             match[partner_bad] = v[partner_bad]
-        coarse = contract(g, match)
+        coarse = contract(g, match, contract_hyper=contract_hyper)
         if coarse.num_vertices > shrink_floor * g.num_vertices:
             break
         levels.append(coarse)

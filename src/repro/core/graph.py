@@ -1,9 +1,25 @@
-"""Spike-weighted SNN graphs in CSR form.
+"""Spike-weighted SNN graphs in CSR form — plus the multicast hypergraph.
 
-The profiling phase (``repro.snn.simulate``) produces an undirected graph
-G(N, S): vertices are neurons, an edge (i, j) carries the number of spikes
-communicated on the synapse between i and j during the profiled window
-(paper §3.2).  All partitioning machinery operates on this CSR structure.
+The profiling phase (``repro.snn.simulate``) produces two views of the same
+traffic:
+
+* an undirected graph G(N, S): vertices are neurons, an edge (i, j) carries
+  the number of spikes communicated on the synapse between i and j during
+  the profiled window (paper §3.2).  ``edge_cut`` over this graph is the
+  classic partitioning objective — it counts every cut *synapse*.
+* a hypergraph H(N, E): one hyperedge per firing neuron, holding its
+  destination pin set with per-pin spike counts.  On a real NoC a neuron
+  whose spikes fan out to d destination cores injects one multicast packet
+  replicated along at most d branches — not d independent unicasts — so the
+  matching objective is the hMETIS-style connectivity-(λ−1) communication
+  volume ``comm_volume``: each source pays its fire count once per *distinct*
+  remote destination partition, not once per cut synapse.
+
+On pure unicast traffic (every source has exactly one pin) the two
+objectives coincide; on fan-out-heavy SNNs edge-cut over-counts multicast
+packets and the partitioner optimizes a different quantity than the NoC
+simulator measures.  All partitioning machinery accepts either objective
+(see ``repro.core.partition``).
 """
 from __future__ import annotations
 
@@ -11,7 +27,64 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["Graph", "build_graph", "edge_cut", "partition_weights", "validate_partition"]
+__all__ = [
+    "Graph",
+    "Hypergraph",
+    "build_graph",
+    "build_hypergraph",
+    "edge_cut",
+    "comm_volume",
+    "volume_degrees",
+    "presence_degrees",
+    "edge_partition_counts",
+    "csr_gather",
+    "grouped_admission",
+    "partition_weights",
+    "validate_partition",
+]
+
+
+def csr_gather(xadj: np.ndarray, rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Gather the CSR entry indices of ``rows``: (entry index, local row id).
+
+    The ranges-to-indices expansion shared by every CSR consumer: start of
+    each row repeated, plus a within-row ramp.
+    """
+    counts = (xadj[rows + 1] - xadj[rows]).astype(np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+    starts = np.repeat(xadj[rows], counts)
+    ramp = np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(counts) - counts, counts
+    )
+    local = np.repeat(np.arange(rows.shape[0], dtype=np.int64), counts)
+    return starts + ramp, local
+
+
+def grouped_admission(
+    groups: np.ndarray, weights: np.ndarray, headroom: np.ndarray
+) -> np.ndarray:
+    """Admit entries per group while their cumulative weight fits.
+
+    Entries must arrive pre-sorted by group (then by admission priority
+    within each group); ``headroom[g]`` is group g's remaining capacity.
+    Returns a boolean admit mask: within each group, the longest prefix
+    whose running weight stays within headroom — the grouped-cumsum
+    admission step shared by the batched refiner and the vectorized
+    region grower.
+    """
+    m = groups.shape[0]
+    if m == 0:
+        return np.zeros(0, dtype=bool)
+    cw = np.cumsum(weights)
+    new_grp = np.empty(m, dtype=bool)
+    new_grp[0] = True
+    new_grp[1:] = groups[1:] != groups[:-1]
+    grp_starts = np.nonzero(new_grp)[0]
+    grp_sizes = np.diff(np.append(grp_starts, m))
+    within = cw - np.repeat(cw[grp_starts] - weights[grp_starts], grp_sizes)
+    return within <= headroom[groups]
 
 
 @dataclass
@@ -32,6 +105,10 @@ class Graph:
     # Maps each vertex of this (coarse) graph back to vertices of the parent
     # finer graph; None at level 0.
     cmap: np.ndarray | None = field(default=None, repr=False)
+    # Multicast hyperedge view of the same traffic; contracted alongside the
+    # graph during coarsening when present.
+    hyper: "Hypergraph | None" = field(default=None, repr=False)
+    _edge_src: np.ndarray | None = field(default=None, repr=False, compare=False)
 
     @property
     def num_vertices(self) -> int:
@@ -51,12 +128,143 @@ class Graph:
         """Sum of edge weights (each undirected edge counted once)."""
         return int(self.adjwgt.sum() // 2)
 
+    @property
+    def edge_src(self) -> np.ndarray:
+        """(m,) int64 CSR row index of each directed edge, computed lazily once.
+
+        Hot loops (edge cut, batched refinement, contraction) all need the
+        ``np.repeat`` source expansion; caching it here makes those calls
+        O(m) gathers instead of re-materializing the expansion every time.
+        """
+        if self._edge_src is None:
+            self._edge_src = np.repeat(
+                np.arange(self.num_vertices, dtype=np.int64), np.diff(self.xadj)
+            )
+        return self._edge_src
+
     def degree(self, v: int) -> int:
         return int(self.xadj[v + 1] - self.xadj[v])
 
     def neighbors(self, v: int) -> tuple[np.ndarray, np.ndarray]:
         s, e = self.xadj[v], self.xadj[v + 1]
         return self.adjncy[s:e], self.adjwgt[s:e]
+
+
+@dataclass
+class Hypergraph:
+    """Multicast traffic in CSR form: hyperedge e = source ``hsrc[e]`` + pins.
+
+    One hyperedge per source neuron with outgoing synapses.  ``hpins`` holds
+    the destination vertices (deduplicated per hyperedge, never equal to the
+    source), ``hwgt`` the spikes delivered to each pin over the window, and
+    ``hfire`` the source's fire count — the number of multicast packets the
+    source injects toward each distinct destination partition.
+
+    The connectivity objective weighs hyperedges by ``hfire`` alone;
+    ``hwgt`` is the per-destination delivered-spike ledger (a pin that
+    absorbs several parallel synapses carries their sum), kept so coarse
+    levels preserve delivered-spike totals exactly — external deliveries
+    are conserved under contraction and only pins collapsing into their
+    source (core-local deliveries) leave the ledger.
+
+    Attributes:
+      hxadj: (E+1,) int64 — CSR offsets into hpins/hwgt.
+      hpins: (P,)   int32 — destination vertex ids.
+      hwgt:  (P,)   int64 — spikes delivered to that pin.
+      hsrc:  (E,)   int32 — source vertex of each hyperedge.
+      hfire: (E,)   int64 — spikes fired by the source (hyperedge weight).
+    """
+
+    hxadj: np.ndarray
+    hpins: np.ndarray
+    hwgt: np.ndarray
+    hsrc: np.ndarray
+    hfire: np.ndarray
+    num_vertices: int
+    _pin_edge: np.ndarray | None = field(default=None, repr=False, compare=False)
+    _incidence: tuple[np.ndarray, np.ndarray] | None = field(
+        default=None, repr=False, compare=False
+    )
+
+    @property
+    def num_hyperedges(self) -> int:
+        return int(self.hsrc.shape[0])
+
+    @property
+    def num_pins(self) -> int:
+        return int(self.hpins.shape[0])
+
+    @property
+    def pin_edge(self) -> np.ndarray:
+        """(P,) int64 hyperedge id of each pin (cached CSR row expansion)."""
+        if self._pin_edge is None:
+            self._pin_edge = np.repeat(
+                np.arange(self.num_hyperedges, dtype=np.int64), np.diff(self.hxadj)
+            )
+        return self._pin_edge
+
+    def incidence(self) -> tuple[np.ndarray, np.ndarray]:
+        """Vertex → hyperedge CSR: (vxadj (n+1,), vedges) listing, for every
+        vertex, the hyperedges it belongs to (as source or pin).
+
+        Pins never equal their source and are deduplicated per hyperedge, so
+        each (vertex, hyperedge) membership appears exactly once.
+        """
+        if self._incidence is None:
+            n = self.num_vertices
+            verts = np.concatenate(
+                [self.hpins.astype(np.int64), self.hsrc.astype(np.int64)]
+            )
+            edges = np.concatenate(
+                [self.pin_edge, np.arange(self.num_hyperedges, dtype=np.int64)]
+            )
+            order = np.argsort(verts, kind="stable")
+            verts, edges = verts[order], edges[order]
+            vxadj = np.zeros(n + 1, dtype=np.int64)
+            np.add.at(vxadj, verts + 1, 1)
+            self._incidence = (np.cumsum(vxadj), edges)
+        return self._incidence
+
+    def members(self, e: int) -> np.ndarray:
+        """All vertices of hyperedge e: the source followed by its pins."""
+        s, t = self.hxadj[e], self.hxadj[e + 1]
+        return np.concatenate([[self.hsrc[e]], self.hpins[s:t]])
+
+
+def build_hypergraph(
+    num_vertices: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    fire_counts: np.ndarray,
+) -> Hypergraph:
+    """Build the multicast hypergraph from directed synapse (src, dst) pairs.
+
+    One hyperedge per distinct source with at least one non-self pin; pin
+    weights are the source's fire count (spikes delivered on that synapse),
+    duplicates merged by summing.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    fire_counts = np.asarray(fire_counts, dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+
+    key = src * num_vertices + dst
+    uniq, counts = np.unique(key, return_counts=True)
+    usrc = uniq // num_vertices
+    upin = uniq % num_vertices
+    uwgt = fire_counts[usrc] * counts  # duplicate synapses merge
+
+    esrc, estart = np.unique(usrc, return_index=True)
+    hxadj = np.concatenate([estart, [usrc.shape[0]]]).astype(np.int64)
+    return Hypergraph(
+        hxadj=hxadj,
+        hpins=upin.astype(np.int32),
+        hwgt=uwgt.astype(np.int64),
+        hsrc=esrc.astype(np.int32),
+        hfire=fire_counts[esrc].astype(np.int64),
+        num_vertices=num_vertices,
+    )
 
 
 def build_graph(
@@ -110,12 +318,138 @@ def build_graph(
 def edge_cut(graph: Graph, part: np.ndarray) -> int:
     """Sum of weights of edges whose endpoints lie in different partitions.
 
-    This is the partitioning objective: the number of spikes communicated
-    *between* partitions (paper §3.3, "global traffic").
+    The classic partitioning objective: the number of spikes communicated
+    *between* partitions counted once per cut synapse (paper §3.3, "global
+    traffic").  Over-counts multicast packets on fan-out traffic — see
+    ``comm_volume`` for the NoC-faithful alternative.
     """
-    src = np.repeat(np.arange(graph.num_vertices), np.diff(graph.xadj))
-    cut_mask = part[src] != part[graph.adjncy]
+    cut_mask = part[graph.edge_src] != part[graph.adjncy]
     return int(graph.adjwgt[cut_mask].sum() // 2)
+
+
+def comm_volume(hyper: Hypergraph, part: np.ndarray) -> int:
+    """Connectivity-(λ−1) communication volume of a partition.
+
+    For each hyperedge e let λ(e) be the number of distinct partitions its
+    members (source + pins) span; the volume is sum_e hfire[e] * (λ(e) − 1):
+    each firing injects one multicast packet per distinct partition beyond
+    the source's own.  Equals ``edge_cut`` on pure unicast hypergraphs.
+    """
+    part = np.asarray(part, dtype=np.int64)
+    ne = hyper.num_hyperedges
+    if ne == 0:
+        return 0
+    k = int(part.max()) + 1
+    keys = np.concatenate(
+        [
+            hyper.pin_edge * k + part[hyper.hpins],
+            np.arange(ne, dtype=np.int64) * k + part[hyper.hsrc],
+        ]
+    )
+    uniq = np.unique(keys)
+    lam = np.bincount(uniq // k, minlength=ne)
+    return int((hyper.hfire * (lam - 1)).sum())
+
+
+def edge_partition_counts(hyper: Hypergraph, part: np.ndarray, k: int) -> np.ndarray:
+    """(E, k) member counts Φ(e, p): how many members (source + pins) of each
+    hyperedge lie in each partition.  λ(e) is the number of nonzero columns
+    of row e; refiners maintain this table incrementally across moves.
+    int32 — counts are bounded by an edge's pin count, and the dense table
+    is the volume refiners' dominant allocation on large graphs."""
+    part = np.asarray(part, dtype=np.int64)
+    ne = hyper.num_hyperedges
+    keys = np.concatenate([
+        hyper.pin_edge * k + part[hyper.hpins].astype(np.int64),
+        np.arange(ne, dtype=np.int64) * k + part[hyper.hsrc].astype(np.int64),
+    ])
+    return np.bincount(keys, minlength=ne * k).reshape(ne, k).astype(np.int32)
+
+
+def presence_degrees(
+    phi_pairs: np.ndarray,
+    w: np.ndarray,
+    counts: np.ndarray,
+    local: np.ndarray,
+    own: np.ndarray,
+    k: int,
+) -> np.ndarray:
+    """Shared D* accumulation over (row, incident hyperedge) pairs.
+
+    Given, per pair, the member counts Φ(e, ·) of the incident hyperedge
+    (``phi_pairs``, (P, k)) and its weight (``w``, (P,)), plus the pair→row
+    CSR structure (``counts`` per row, ``local`` row id per pair — grouped
+    by row, as ``csr_gather`` emits) and each row vertex's own partition,
+    returns the (R, k) matrix D*[v, p] = Σ_e w_e [Φ(e, p) > (p == own[v])]:
+    presence of *any* member for foreign columns, of a *second* member for
+    the own column (the row vertex itself always sits there).  Both the
+    from-scratch ``volume_degrees`` and the refiner's live-Φ-table variant
+    reduce to this epilogue; keep the threshold logic here only.
+
+    Pairs must be grouped by row so the per-row sums are two
+    ``np.add.reduceat`` segment reductions (``np.add.at`` is unbuffered
+    and an order of magnitude slower here).
+    """
+    nr = counts.shape[0]
+    out = np.zeros((nr, k), dtype=np.float64)
+    if phi_pairs.shape[0] == 0:
+        return out
+    nonempty = np.nonzero(counts > 0)[0]
+    starts = (np.cumsum(counts) - counts)[nonempty]
+    out[nonempty] = np.add.reduceat(w[:, None] * (phi_pairs > 0), starts, axis=0)
+    own_fix = np.add.reduceat(
+        w * (phi_pairs[np.arange(local.shape[0]), own[local]] > 1), starts
+    )
+    out[np.arange(nr), own] = 0.0
+    out[nonempty, own[nonempty]] = own_fix
+    return out
+
+
+def volume_degrees(
+    hyper: Hypergraph,
+    part: np.ndarray,
+    k: int,
+    rows: np.ndarray | None = None,
+) -> np.ndarray:
+    """(R, k) float64 connectivity degree matrix D* for the volume objective.
+
+    D*[v, p] = sum over hyperedges e containing v of hfire[e] * [e has a
+    member other than v in partition p].  The exact λ-gain of moving v from
+    its partition a to b is then D*[v, b] − D*[v, a] — the same shape as the
+    edge-cut refiners' (external − internal) degree arithmetic, so both the
+    scalar FM queue and the batched vec refiner consume this matrix
+    unchanged.  Entries are integer-valued (exact in float64).
+    """
+    part = np.asarray(part, dtype=np.int64)
+    if rows is None:
+        rows = np.arange(hyper.num_vertices, dtype=np.int64)
+    rows = np.asarray(rows, dtype=np.int64)
+    nr = rows.shape[0]
+    out = np.zeros((nr, k), dtype=np.float64)
+    if hyper.num_hyperedges == 0 or nr == 0:
+        return out
+
+    vxadj, vedges = hyper.incidence()
+    idx, local = csr_gather(vxadj, rows)
+    if idx.shape[0] == 0:
+        return out
+    eids = vedges[idx]  # incident hyperedge per (row, edge) pair
+
+    # Partition member counts Φ(e, p) for the distinct incident hyperedges.
+    ue, einv = np.unique(eids, return_inverse=True)
+    hu = ue.shape[0]
+    pidx, pin_local = csr_gather(hyper.hxadj, ue)
+    keys = np.concatenate(
+        [
+            pin_local * k + part[hyper.hpins[pidx]],
+            np.arange(hu, dtype=np.int64) * k + part[hyper.hsrc[ue]],
+        ]
+    )
+    phi = np.bincount(keys, minlength=hu * k).reshape(hu, k)
+
+    counts = (vxadj[rows + 1] - vxadj[rows]).astype(np.int64)
+    return presence_degrees(phi[einv], hyper.hfire[eids].astype(np.float64),
+                            counts, local, part[rows], k)
 
 
 def partition_weights(graph: Graph, part: np.ndarray, k: int) -> np.ndarray:

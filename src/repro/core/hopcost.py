@@ -6,10 +6,22 @@ cores, so the search loop can score a candidate mapping analytically
 instead of invoking a hardware simulator.  This file is the host/numpy
 reference; `repro.kernels.hop_eval` is the Pallas TPU version and
 `repro.kernels.swap_delta` batch-evaluates SA neighborhoods.
+
+Two traffic models feed the evaluation (``traffic_matrix``'s ``cast``):
+
+* ``"unicast"`` — one packet per spike transmission, i.e. per synapse
+  crossing.  A neuron firing into d remote partitions is counted d_syn
+  times (once per destination synapse) — the paper's Algorithm 1.
+* ``"multicast"`` — one packet per (firing, destination partition): a
+  neuron's fan-out into a partition is a single replicated packet, which
+  is what a multicast NoC actually injects.  Requires the trace time
+  stamps to identify firings.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.trace import dedupe_firings
 
 __all__ = [
     "traffic_matrix",
@@ -21,15 +33,38 @@ __all__ = [
 
 
 def traffic_matrix(
-    part: np.ndarray, trace_src: np.ndarray, trace_dst: np.ndarray, k: int
+    part: np.ndarray,
+    trace_src: np.ndarray,
+    trace_dst: np.ndarray,
+    k: int,
+    trace_t: np.ndarray | None = None,
+    cast: str = "unicast",
 ) -> np.ndarray:
-    """C[i, j] = number of spikes sent from partition i to partition j.
+    """C[i, j] = number of packets sent from partition i to partition j.
 
     Built from the spike trace (Algorithm 1 lines 5-9); the diagonal holds
-    intra-partition spikes, which never enter the NoC (0 hops).
+    intra-partition deliveries, which never enter the NoC (0 hops).
+    ``cast="unicast"`` counts one packet per transmission; ``"multicast"``
+    (requires ``trace_t``) deduplicates transmissions of one firing toward
+    the same destination partition into a single packet.
     """
     pi = part[trace_src].astype(np.int64)
     pj = part[trace_dst].astype(np.int64)
+    if cast == "multicast":
+        if trace_t is None:
+            raise ValueError("multicast traffic needs trace_t to identify firings")
+        # One packet per distinct (firing, dest partition) — off-diagonal
+        # only: intra-partition deliveries are synaptic events, not
+        # packets, and keep their per-transmission counts so the matrix
+        # totals match `nocsim.simulate_noc`'s accounting (which shares
+        # `dedupe_firings` for the packet identity).
+        remote = pi != pj
+        _, rsrc, rpj, _ = dedupe_firings(trace_t[remote], trace_src[remote],
+                                         pj[remote], int(part.shape[0]), k)
+        pi = np.concatenate([pi[~remote], part[rsrc].astype(np.int64)])
+        pj = np.concatenate([pj[~remote], rpj])
+    elif cast != "unicast":
+        raise ValueError(f"unknown cast {cast!r}")
     flat = np.bincount(pi * k + pj, minlength=k * k)
     return flat.reshape(k, k).astype(np.int64)
 

@@ -1,8 +1,7 @@
 """SNEAP partitioning phase: the multilevel driver (paper §3.3).
 
-Coarsening -> initial partitioning -> uncoarsening with refinement,
-minimizing the number of spikes communicated between partitions under the
-neuromorphic-core capacity constraint (<= `capacity` neurons/core).
+Coarsening -> initial partitioning -> uncoarsening with refinement, under
+the neuromorphic-core capacity constraint (<= `capacity` neurons/core).
 
 Two interchangeable engines drive the coarsen/refine hot path:
 
@@ -18,11 +17,22 @@ Two interchangeable engines drive the coarsen/refine hot path:
   of the scalar cut at a tiny fraction of the time — the engine to use
   for ≳10^4-neuron graphs.
 
+Two objectives drive both engines (selected by ``objective``):
+
+* ``objective="cut"`` — minimize spikes on cut synapses (`graph.edge_cut`),
+  the paper's stated metric.
+* ``objective="volume"`` — minimize the connectivity-(λ−1) communication
+  volume (`graph.comm_volume`) over the multicast hypergraph attached to
+  the profiled graph: a source pays its fire count once per *distinct*
+  remote destination partition, matching what the multicast NoC simulator
+  measures.  Requires ``graph.hyper`` (set by `snn.simulate.profile_snn`).
+
 Both produce `validate_partition`-clean results and share every other
 knob; `benchmarks/bench_partition.py` tracks their cut/time trade-off.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from dataclasses import dataclass
@@ -30,7 +40,14 @@ from dataclasses import dataclass
 import numpy as np
 
 from .coarsen import coarsen
-from .graph import Graph, edge_cut, partition_weights, validate_partition
+from .graph import (
+    Graph,
+    Hypergraph,
+    comm_volume,
+    edge_cut,
+    partition_weights,
+    validate_partition,
+)
 from .initpart import greedy_region_growing
 from .refine import uncoarsen
 
@@ -52,6 +69,8 @@ class PartitionResult:
     num_levels: int
     seconds: float
     impl: str = "scalar"
+    objective: str = "cut"  # which metric refinement optimized
+    comm_volume: int | None = None  # connectivity-(λ−1) volume, when hyper known
 
     def partition_sizes(self, graph: Graph) -> np.ndarray:
         return partition_weights(graph, self.part, self.k)
@@ -67,6 +86,8 @@ def sneap_partition(
     slack: float = 1.10,
     max_k: int | None = None,
     impl: str = "scalar",
+    objective: str = "cut",
+    hyper: Hypergraph | None = None,
 ) -> PartitionResult:
     """Partition an SNN graph into k parts of <= `capacity` neurons each.
 
@@ -81,9 +102,27 @@ def sneap_partition(
          adapts: graphs under ``_VEC_MIN_N`` vertices run the scalar
          algorithms outright, and during uncoarsening small few-partition
          levels delegate to the scalar FM refiner (`refine_vec` bounds).
+      objective: "cut" (spikes on cut synapses) or "volume" (multicast
+         communication volume over the hypergraph; see module docstring).
+      hyper: multicast hypergraph; defaults to ``graph.hyper`` and, when
+         passed explicitly, overrides it (without mutating the caller's
+         graph).  Required for ``objective="volume"``; when present,
+         ``comm_volume`` is reported on the result under either objective.
     """
     if impl not in ("scalar", "vec"):
         raise ValueError(f"unknown partitioning impl {impl!r}")
+    if objective not in ("cut", "volume"):
+        raise ValueError(f"unknown objective {objective!r}")
+    if hyper is not None:
+        # An explicit hypergraph wins over the attached one; rebind on a
+        # shallow copy so the caller's graph is not mutated.
+        graph = dataclasses.replace(graph, hyper=hyper)
+    hyper = graph.hyper
+    if objective == "volume" and hyper is None:
+        raise ValueError(
+            "objective='volume' needs the multicast hypergraph: pass hyper= or "
+            "use a graph profiled by snn.simulate.profile_snn"
+        )
     requested_impl = impl
     if impl == "vec" and graph.num_vertices < _VEC_MIN_N:
         impl = "scalar"
@@ -103,19 +142,31 @@ def sneap_partition(
     # Coarse vertices must stay well under capacity or region growing jams.
     max_vwgt = max(1, capacity // 3)
     levels = coarsen(graph, rng, coarsen_to=coarsen_to, max_vwgt=max_vwgt,
-                     impl=impl)
-    coarse_part = greedy_region_growing(levels[-1], k, capacity, rng)
+                     impl=impl, contract_hyper=objective == "volume")
+    coarse_part = greedy_region_growing(
+        levels[-1], k, capacity, rng,
+        impl="auto" if impl == "vec" else "scalar",
+    )
     if impl == "vec":
         from .refine_vec import uncoarsen_vec
 
-        part, cut = uncoarsen_vec(levels, coarse_part, k, capacity,
-                                  max_nonimproving)
+        part, score = uncoarsen_vec(levels, coarse_part, k, capacity,
+                                    max_nonimproving, objective=objective)
     else:
-        part, cut = uncoarsen(levels, coarse_part, k, capacity, max_nonimproving)
+        part, score = uncoarsen(levels, coarse_part, k, capacity,
+                                max_nonimproving, objective=objective)
     seconds = time.perf_counter() - t0
     validate_partition(graph, part, k, capacity)
-    assert cut == edge_cut(graph, part), "incremental cut bookkeeping diverged"
+    if objective == "cut":
+        cut = score
+        assert cut == edge_cut(graph, part), "incremental cut bookkeeping diverged"
+        vol = comm_volume(hyper, part) if hyper is not None else None
+    else:
+        vol = score
+        assert vol == comm_volume(hyper, part), "incremental volume bookkeeping diverged"
+        cut = edge_cut(graph, part)
     return PartitionResult(
         part=part, k=k, edge_cut=cut, capacity=capacity,
         num_levels=len(levels), seconds=seconds, impl=requested_impl,
+        objective=objective, comm_volume=vol,
     )

@@ -2,6 +2,15 @@
 
 Also drives the two baseline toolchains (SpiNeMap, SCO) over the same
 profiled trace so the paper's Figures 4-8 comparisons are apples-to-apples.
+
+The ``objective`` knob threads the partitioning metric through the whole
+stack: ``"cut"`` (spikes on cut synapses, the paper's metric) or
+``"volume"`` (multicast communication volume).  ``cast`` independently
+selects the NoC traffic model used for placement scoring and replay —
+by default it follows the objective ("volume" → "multicast"), so the
+partitioner, the placement search, and the simulator all measure the same
+quantity.  ``ToolchainResult.summary()`` reports both metrics for every
+run, which is what lets Figures 4-8 be regenerated under either model.
 """
 from __future__ import annotations
 
@@ -32,6 +41,8 @@ class ToolchainResult:
     mapping: MappingResult
     noc: NoCStats
     phase_seconds: dict = field(default_factory=dict)
+    objective: str = "cut"
+    cast: str = "unicast"
 
     @property
     def total_seconds(self) -> float:
@@ -41,8 +52,11 @@ class ToolchainResult:
         return {
             "method": self.method,
             "snn": self.snn,
+            "objective": self.objective,
+            "cast": self.cast,
             "k": self.partition.k,
             "edge_cut": self.partition.edge_cut,
+            "comm_volume": self.partition.comm_volume,
             "avg_hop": self.mapping.avg_hop,
             "avg_latency": self.noc.avg_latency,
             "energy_pj": self.noc.dynamic_energy_pj,
@@ -66,6 +80,8 @@ def run_toolchain(
     link_capacity: int = 4,
     mapper_kwargs: dict | None = None,
     partition_impl: str = "scalar",
+    objective: str = "cut",
+    cast: str | None = None,
 ) -> ToolchainResult:
     """Run one toolchain (sneap | spinemap | sco) over a profiled SNN.
 
@@ -75,7 +91,14 @@ def run_toolchain(
 
     ``partition_impl`` selects the sneap partitioning engine ("scalar" or
     "vec" — see `repro.core.partition`); ignored by the baselines.
+    ``objective`` selects the partitioning metric ("cut" or "volume");
+    ``cast`` the NoC traffic model ("unicast" or "multicast"), defaulting
+    to the model that matches the objective.
     """
+    if objective not in ("cut", "volume"):
+        raise ValueError(f"unknown objective {objective!r}")
+    if cast is None:
+        cast = "multicast" if objective == "volume" else "unicast"
     num_cores = mesh_w * mesh_h
     phase: dict[str, float] = {}
     mapper_kwargs = dict(mapper_kwargs or {})
@@ -83,12 +106,14 @@ def run_toolchain(
     t0 = time.perf_counter()
     if method == "sneap":
         pres = sneap_partition(profile.graph, capacity=capacity, seed=seed,
-                               max_k=num_cores, impl=partition_impl)
+                               max_k=num_cores, impl=partition_impl,
+                               objective=objective)
     elif method == "spinemap":
         pres = greedy_kl_partition(profile.graph, capacity=capacity, seed=seed,
-                                   max_k=num_cores)
+                                   max_k=num_cores, objective=objective)
     elif method == "sco":
-        pres = sco_partition(profile.graph, capacity=capacity)
+        pres = sco_partition(profile.graph, capacity=capacity,
+                             objective=objective)
     else:
         raise ValueError(f"unknown method {method!r}")
     phase["partition"] = time.perf_counter() - t0
@@ -98,8 +123,11 @@ def run_toolchain(
         )
 
     t0 = time.perf_counter()
-    traffic = traffic_matrix(pres.part, profile.trace_src, profile.trace_dst, pres.k)
-    trace_len = profile.num_spikes
+    traffic = traffic_matrix(pres.part, profile.trace_src, profile.trace_dst,
+                             pres.k, trace_t=profile.trace_t, cast=cast)
+    # Normalize average hop by the packet count of the chosen traffic model
+    # (== num_spikes for unicast; deduplicated multicast packets otherwise).
+    trace_len = int(traffic.sum())
     if method == "sco":
         mres = sco_place(pres.k, num_cores)
         dist = hop_distance_matrix(num_cores, mesh_w)
@@ -114,10 +142,10 @@ def run_toolchain(
     noc = simulate_noc(
         profile.trace_t, profile.trace_src, profile.trace_dst,
         pres.part, mres.placement, mesh_w, mesh_h,
-        link_capacity=link_capacity, mode=noc_mode,
+        link_capacity=link_capacity, mode=noc_mode, cast=cast,
     )
     phase["evaluate"] = time.perf_counter() - t0
     return ToolchainResult(
         method=method, snn=profile.name, partition=pres, mapping=mres,
-        noc=noc, phase_seconds=phase,
+        noc=noc, phase_seconds=phase, objective=objective, cast=cast,
     )

@@ -2,9 +2,9 @@
 
 The scalar engine in ``refine.py`` follows the paper: a single global
 priority queue pops one boundary vertex at a time, re-deriving its
-per-partition external degrees with a fresh ``np.bincount`` per pop.  That
-is O(n) Python iterations per pass and dominates end-to-end partitioning
-time on large SNNs.
+per-partition degrees with a fresh ``np.bincount`` per pop.  That is O(n)
+Python iterations per pass and dominates end-to-end partitioning time on
+large SNNs.
 
 This module is the Jet/label-propagation-style alternative: one shot of
 
@@ -25,7 +25,17 @@ is applied per iteration:
    loop over vertices);
 4. repeat until no positive-gain move exists (a fixed point).
 
-Each iteration strictly decreases the integer edge cut, so termination is
+Both objectives run through the same loop (selected by ``objective``):
+
+* ``"cut"`` — the (rows, k) degree matrix above; conflicts are graph
+  adjacency.
+* ``"volume"`` — the degree matrix generalizes to the per-source
+  distinct-partition presence matrix D* of ``graph.volume_degrees``
+  (λ-gain of a move = D*[v, b] − D*[v, own], exact), and two candidates
+  conflict when they share a *hyperedge* (two pins of one source need not
+  be graph-adjacent, but their λ-gains interact).
+
+Each iteration strictly decreases the integer objective, so termination is
 guaranteed.  The batch scheme has weaker hill-climbing than the scalar
 FM-style queue (no tentative negative-gain moves), which is why
 ``sneap_partition`` accepts both engines and the tests hold the vec cut to
@@ -34,14 +44,27 @@ a small tolerance of the scalar cut rather than equality.
 For large k the dense per-partition degree matrix is also expressible as
 ``A @ onehot(part)`` — a tiled one-hot matmul the MXU eats for breakfast;
 ``repro.kernels.gain_eval`` implements exactly that and is used here when
-running on TPU with a graph small enough to densify (coarse levels).
+running on TPU with a graph small enough to densify (coarse levels).  The
+volume objective has the analogous dense form ``B @ presence`` (incidence
+times per-hyperedge partition presence) — the kernel's "connectivity"
+mode.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .graph import Graph, edge_cut, partition_weights
-from .refine import project, refine_level
+from .graph import (
+    Graph,
+    Hypergraph,
+    comm_volume,
+    csr_gather as _csr_gather,
+    edge_cut,
+    edge_partition_counts,
+    grouped_admission,
+    partition_weights,
+    volume_degrees,
+)
+from .refine import _MAX_DEG_ENTRIES, project, refine_level
 
 __all__ = ["partition_degrees", "refine_level_vec", "uncoarsen_vec"]
 
@@ -55,31 +78,25 @@ __all__ = ["partition_degrees", "refine_level_vec", "uncoarsen_vec"]
 # many-partition level would burn the very speedup this module exists for.
 _SCALAR_NK = 1 << 20
 _SCALAR_MAX_K = 64
+# Volume-objective λ-gain queue operations touch every member of every
+# incident hyperedge (fan-out × heavier than a cut bincount), so the vec
+# engine only hands the very coarsest levels to the scalar FM queue there.
+_SCALAR_NK_VOLUME = 1 << 15
 
-# Densifying the adjacency for the gain_eval kernel is only worthwhile on
-# TPU and only for graphs whose dense (n, n) form fits comfortably in HBM.
+# Densifying for the gain_eval kernel is only worthwhile on TPU and only
+# for problems whose dense form fits comfortably in HBM (adjacency (n, n)
+# for cut; incidence (n, E) for volume).
 _KERNEL_MAX_N = 4096
 _KERNEL_MIN_K = 64
 
-# Cap on boundary_rows * k entries materialized at once by the numpy path
-# (~128 MB of float64); larger boundaries are swept in row chunks.
-_MAX_DEG_ENTRIES = 16_000_000
+# Boundary batches share `refine._MAX_DEG_ENTRIES`: rows * k entries per
+# evaluation chunk (~128 MB of float64); larger boundaries are swept in
+# row chunks.
 
 
 def _row_edges(graph: Graph, rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """Gather the CSR edges of ``rows``: (edge index array, local row id array)."""
-    xadj = graph.xadj
-    counts = (xadj[rows + 1] - xadj[rows]).astype(np.int64)
-    total = int(counts.sum())
-    if total == 0:
-        return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
-    # Ranges-to-indices: start of each row repeated, plus a within-row ramp.
-    starts = np.repeat(xadj[rows], counts)
-    ramp = np.arange(total, dtype=np.int64) - np.repeat(
-        np.cumsum(counts) - counts, counts
-    )
-    local = np.repeat(np.arange(rows.shape[0], dtype=np.int64), counts)
-    return starts + ramp, local
+    return _csr_gather(graph.xadj, rows)
 
 
 def partition_degrees(
@@ -110,9 +127,17 @@ def _dense_adjacency(graph: Graph) -> np.ndarray:
     """(n, n) f32 dense adjacency for the gain_eval kernel path."""
     n = graph.num_vertices
     adj = np.zeros((n, n), dtype=np.float32)
-    src = np.repeat(np.arange(n), np.diff(graph.xadj))
-    adj[src, graph.adjncy] = graph.adjwgt
+    adj[graph.edge_src, graph.adjncy] = graph.adjwgt
     return adj
+
+
+def _dense_incidence(hyper: Hypergraph) -> np.ndarray:
+    """(n, E) f32 member incidence, hfire-weighted, for the connectivity mode."""
+    inc = np.zeros((hyper.num_vertices, hyper.num_hyperedges), dtype=np.float32)
+    e_ids = np.arange(hyper.num_hyperedges)
+    inc[hyper.hsrc.astype(np.int64), e_ids] = hyper.hfire
+    inc[hyper.hpins.astype(np.int64), hyper.pin_edge] = hyper.hfire[hyper.pin_edge]
+    return inc
 
 
 def _degrees_via_kernel(adj: np.ndarray, part: np.ndarray, k: int,
@@ -127,6 +152,32 @@ def _degrees_via_kernel(adj: np.ndarray, part: np.ndarray, k: int,
     return np.asarray(deg, dtype=np.float64)[rows]
 
 
+def _volume_degrees_via_kernel(inc: np.ndarray, hyper: Hypergraph,
+                               part: np.ndarray, k: int, rows: np.ndarray,
+                               backend: str) -> np.ndarray:
+    """Row-subset D* via the gain_eval kernel's connectivity mode.
+
+    base = B @ [Φ>0] counts every member (the row vertex included); the own
+    column is overwritten with the B @ [Φ>1] gather, which demands a second
+    member — exactly ``graph.volume_degrees``.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.gain_eval import connectivity_degrees
+
+    phi = edge_partition_counts(hyper, part, k)
+    pres = jnp.asarray(
+        np.concatenate([(phi > 0), (phi > 1)], axis=1).astype(np.float32)
+    )
+    both = np.asarray(connectivity_degrees(jnp.asarray(inc), pres,
+                                           backend=backend), dtype=np.float64)
+    base, alt = both[rows, :k], both[rows, k:]
+    own = part[rows]
+    r = np.arange(rows.shape[0])
+    base[r, own] = alt[r, own]
+    return base
+
+
 def refine_level_vec(
     graph: Graph,
     part: np.ndarray,
@@ -135,30 +186,40 @@ def refine_level_vec(
     max_iters: int = 200,
     use_kernel: bool | None = None,
     kernel_backend: str = "auto",
+    objective: str = "cut",
 ) -> tuple[np.ndarray, int]:
-    """Refine ``part`` by batched positive-gain moves; returns (part, cut).
+    """Refine ``part`` by batched positive-gain moves; returns (part, score).
 
+    ``score`` is the edge cut or communication volume per ``objective``.
     ``use_kernel=None`` auto-enables the gain_eval Pallas path on TPU for
-    levels small enough to densify — and only when the total edge weight
-    fits in float32's exact-integer range (< 2^24), since the kernel
-    accumulates spike counts in f32 and the incremental cut bookkeeping
-    demands exact integer gains.  True forces it (tests run it in
-    interpret mode via ``kernel_backend="interpret"``), False keeps the
-    pure-numpy (exact float64) bincount path.
+    levels small enough to densify — and only when the total weight fits in
+    float32's exact-integer range (< 2^24), since the kernel accumulates
+    spike counts in f32 and the incremental bookkeeping demands exact
+    integer gains.  True forces it (tests run it in interpret mode via
+    ``kernel_backend="interpret"``), False keeps the pure-numpy (exact
+    float64) bincount path.
     """
+    if objective not in ("cut", "volume"):
+        raise ValueError(f"unknown objective {objective!r}")
+    hyper = graph.hyper
+    if objective == "volume" and hyper is None:
+        raise ValueError("objective='volume' requires graph.hyper")
     part = part.astype(np.int64).copy()
     n = graph.num_vertices
-    xadj, adjncy, adjwgt, vwgt = graph.xadj, graph.adjncy, graph.adjwgt, graph.vwgt
+    adjncy, adjwgt, vwgt = graph.adjncy, graph.adjwgt, graph.vwgt
     pweight = partition_weights(graph, part, k)
-    cut = edge_cut(graph, part)
+    cut = edge_cut(graph, part) if objective == "cut" else comm_volume(hyper, part)
     if graph.adjncy.shape[0] == 0:
         return part, cut
-    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(xadj))
+    src = graph.edge_src
     nbr = adjncy.astype(np.int64)
     if use_kernel is None:
         use_kernel = False
-        if (n <= _KERNEL_MAX_N and k >= _KERNEL_MIN_K
-                and int(adjwgt.sum()) < (1 << 24)):
+        total_w = (int(adjwgt.sum()) if objective == "cut"
+                   else int(hyper.hfire.sum()) * 2)
+        dense_ok = (n <= _KERNEL_MAX_N if objective == "cut"
+                    else n <= _KERNEL_MAX_N and hyper.num_hyperedges <= _KERNEL_MAX_N)
+        if dense_ok and k >= _KERNEL_MIN_K and total_w < (1 << 24):
             try:
                 import jax
 
@@ -166,12 +227,84 @@ def refine_level_vec(
             except Exception:
                 use_kernel = False
 
-    adj_dense = _dense_adjacency(graph) if use_kernel else None
-    chunk = max(1, _MAX_DEG_ENTRIES // max(k, 1))
+    if use_kernel:
+        dense = (_dense_adjacency(graph) if objective == "cut"
+                 else _dense_incidence(hyper))
+    else:
+        dense = None
+    # The volume path materializes a (pairs, k) product where pairs is the
+    # chunk's total incidence degree — bound the chunk by that expansion,
+    # not just rows * k, or fan-out-heavy graphs blow the memory cap.
+    row_cost = float(k)
+    if objective == "volume" and n:
+        avg_inc = (hyper.num_pins + hyper.num_hyperedges) / n
+        row_cost *= max(avg_inc, 1.0)
+    chunk = max(1, int(_MAX_DEG_ENTRIES / row_cost))
+
+    def eval_rows(rows_v: np.ndarray) -> np.ndarray:
+        if objective == "cut":
+            if use_kernel:
+                return _degrees_via_kernel(dense, part, k, rows_v, kernel_backend)
+            return partition_degrees(graph, part, k, rows=rows_v)
+        if use_kernel:
+            return _volume_degrees_via_kernel(dense, hyper, part, k, rows_v,
+                                              kernel_backend)
+        return volume_degrees(hyper, part, k, rows=rows_v)
+
+    def suppressed_movers(cand_idx: np.ndarray) -> np.ndarray:
+        """One Luby round: the suppressed-candidate mask for this batch.
+
+        A candidate loses to any co-scoped candidate of strictly higher
+        (gain, -id) priority.  Cut: scopes are graph edges, so the pairwise
+        scan over candidates' adjacency rows is degree-bounded.  Volume:
+        scopes are hyperedges — the pairwise form would square a hub
+        edge's pin count, so instead each hyperedge reduces its candidate
+        members to one packed max priority and a candidate is suppressed
+        iff some incident edge's max beats it (O(candidate incidences),
+        no pin expansion).
+        """
+        suppressed = np.zeros(n, dtype=bool)
+        if objective == "cut":
+            eidx, local = _row_edges(graph, cand_idx)
+            u, v = cand_idx[local], nbr[eidx]
+            conflict = is_cand[v]
+            u, v = u[conflict], v[conflict]
+            beaten = (gain_full[v] > gain_full[u]) | (
+                (gain_full[v] == gain_full[u]) & (v < u)
+            )
+            suppressed[u[beaten]] = True
+            return suppressed
+        # Packed (gain, -id) priority; distinct ids -> distinct keys, so
+        # per-edge maxima induce exactly the pairwise tie-breaking above.
+        gmax = int(gain_full[cand_idx].max())
+        if gmax >= (1 << 62) // (n + 1):
+            raise OverflowError("gains too large for the packed Luby keys")
+        pri = gain_full[cand_idx].astype(np.int64) * (n + 1) + (n - cand_idx)
+        vxadj, vedges = hyper.incidence()
+        eidx, local = _csr_gather(vxadj, cand_idx)
+        eids = vedges[eidx]
+        edge_max = np.full(hyper.num_hyperedges, -1, dtype=np.int64)
+        np.maximum.at(edge_max, eids, pri[local])
+        lost = edge_max[eids] > pri[local]
+        suppressed[cand_idx[local[lost]]] = True
+        return suppressed
+
+    def touched_by(moved: np.ndarray) -> np.ndarray:
+        """Vertices whose cached gains are stale after `moved` move."""
+        if objective == "cut":
+            eidx, _ = _row_edges(graph, moved)
+            return adjncy[eidx].astype(np.int64)
+        vxadj, vedges = hyper.incidence()
+        eidx, _ = _csr_gather(vxadj, moved)
+        ue = np.unique(vedges[eidx])
+        pidx, _ = _csr_gather(hyper.hxadj, ue)
+        return np.concatenate([hyper.hpins[pidx].astype(np.int64),
+                               hyper.hsrc[ue].astype(np.int64)])
+
     # Cached per-vertex move state.  A cached (gain, target) stays exact
-    # until a neighbor moves (gains depend only on neighbor partitions) or
-    # the vertex itself moves, so each iteration only re-evaluates the
-    # "active" set: last batch's movers plus their neighborhoods.
+    # until a co-member moves (gains depend only on other members'
+    # partitions) or the vertex itself moves, so each iteration only
+    # re-evaluates the "active" set: last batch's movers plus their scopes.
     gain_full = np.full(n, -np.inf)
     target_full = np.full(n, -1, dtype=np.int64)
     mask = np.zeros(n, dtype=bool)
@@ -190,11 +323,7 @@ def refine_level_vec(
         # work for a constraint that rarely binds under the k slack).
         for lo in range(0, active.shape[0], chunk):
             rows_v = active[lo:lo + chunk]
-            if use_kernel:
-                deg = _degrees_via_kernel(adj_dense, part, k, rows_v,
-                                          kernel_backend)
-            else:
-                deg = partition_degrees(graph, part, k, rows=rows_v)
+            deg = eval_rows(rows_v)
             own = part[rows_v]
             rows = np.arange(rows_v.shape[0])
             internal = deg[rows, own]  # advanced indexing: already a copy
@@ -207,20 +336,10 @@ def refine_level_vec(
         if cand_idx.shape[0] == 0:
             break
 
-        # One Luby round: a candidate is suppressed by any adjacent candidate
-        # with strictly higher (gain, -id) priority.  Survivors are an
-        # independent set, so their gains are exact and additive.  Only the
-        # candidates' own adjacency rows are scanned, not all m edges.
-        eidx, local = _row_edges(graph, cand_idx)
-        u = cand_idx[local]
-        v = nbr[eidx]
-        conflict = is_cand[v]
-        u, v = u[conflict], v[conflict]
-        beaten = (gain_full[v] > gain_full[u]) | (
-            (gain_full[v] == gain_full[u]) & (v < u)
-        )
-        suppressed = np.zeros(n, dtype=bool)
-        suppressed[u[beaten]] = True
+        # One Luby round: survivors form a conflict-free set, so their
+        # gains are exact and additive.  Only the candidates' own scope
+        # rows are scanned, not all m edges.
+        suppressed = suppressed_movers(cand_idx)
         movers = cand_idx[~suppressed[cand_idx]]
         if movers.shape[0] == 0:  # unreachable: the max-priority candidate survives
             break
@@ -231,15 +350,7 @@ def refine_level_vec(
         mg = gain_full[movers]
         order = np.lexsort((movers, -mg, mt))
         movers, mt, mg = movers[order], mt[order], mg[order]
-        mw = vwgt[movers]
-        cw = np.cumsum(mw)
-        new_grp = np.empty(movers.shape[0], dtype=bool)
-        new_grp[0] = True
-        new_grp[1:] = mt[1:] != mt[:-1]
-        grp_starts = np.nonzero(new_grp)[0]
-        grp_sizes = np.diff(np.append(grp_starts, movers.shape[0]))
-        within = cw - np.repeat(cw[grp_starts] - mw[grp_starts], grp_sizes)
-        admit = within <= capacity - pweight[mt]
+        admit = grouped_admission(mt, vwgt[movers], capacity - pweight)
         moved, dest, moved_gain = movers[admit], mt[admit], mg[admit]
         if moved.shape[0] == 0:
             # Every candidate was admission-rejected under the *current*
@@ -257,11 +368,10 @@ def refine_level_vec(
         part[moved] = dest
         cut -= int(round(moved_gain.sum()))
 
-        # Next active set: the movers and everything adjacent to one.
-        eidx, _ = _row_edges(graph, moved)
+        # Next active set: the movers and everything co-scoped with one.
         mask[:] = False
         mask[moved] = True
-        mask[adjncy[eidx]] = True
+        mask[touched_by(moved)] = True
         active = np.nonzero(mask)[0]
     return part, cut
 
@@ -275,16 +385,22 @@ def uncoarsen_vec(
     use_kernel: bool | None = None,
     scalar_nk: int = _SCALAR_NK,
     scalar_max_k: int = _SCALAR_MAX_K,
+    objective: str = "cut",
 ) -> tuple[np.ndarray, int]:
     """Walk levels coarse->fine, refining each level with whichever engine
     its shape favors: the scalar FM queue for small few-partition levels
     (see _SCALAR_NK/_SCALAR_MAX_K), the batched vec refiner otherwise.
     ``max_nonimproving`` applies to the scalar-delegated levels."""
 
+    if objective == "volume":
+        scalar_nk = min(scalar_nk, _SCALAR_NK_VOLUME)
+
     def refine(g: Graph, p: np.ndarray) -> tuple[np.ndarray, int]:
         if k <= scalar_max_k and g.num_vertices * k <= scalar_nk:
-            return refine_level(g, p, k, capacity, max_nonimproving)
-        return refine_level_vec(g, p, k, capacity, use_kernel=use_kernel)
+            return refine_level(g, p, k, capacity, max_nonimproving,
+                                objective=objective)
+        return refine_level_vec(g, p, k, capacity, use_kernel=use_kernel,
+                                objective=objective)
 
     part, cut = refine(levels[-1], coarse_part)
     for fine, coarse in zip(reversed(levels[:-1]), reversed(levels[1:])):

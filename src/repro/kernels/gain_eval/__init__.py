@@ -1,4 +1,7 @@
-from .ops import gain_matrix, part_degrees
-from .ref import gain_matrix_ref, part_degrees_ref
+from .ops import connectivity_degrees, gain_matrix, part_degrees
+from .ref import connectivity_degrees_ref, gain_matrix_ref, part_degrees_ref
 
-__all__ = ["part_degrees", "gain_matrix", "part_degrees_ref", "gain_matrix_ref"]
+__all__ = [
+    "part_degrees", "gain_matrix", "connectivity_degrees",
+    "part_degrees_ref", "gain_matrix_ref", "connectivity_degrees_ref",
+]

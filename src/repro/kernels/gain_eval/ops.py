@@ -4,10 +4,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernel import part_degrees_pallas
-from .ref import gain_matrix_ref, part_degrees_ref, part_onehot
+from .kernel import connectivity_matmul_pallas, part_degrees_pallas
+from .ref import (
+    connectivity_degrees_ref,
+    gain_matrix_ref,
+    part_degrees_ref,
+    part_onehot,
+)
 
-__all__ = ["part_degrees", "gain_matrix"]
+__all__ = ["part_degrees", "gain_matrix", "connectivity_degrees"]
 
 
 def part_degrees(
@@ -26,6 +31,24 @@ def part_degrees(
         return part_degrees_pallas(adj, part, k, interpret=False)
     if backend == "interpret":
         return part_degrees_pallas(adj, part, k, interpret=True)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def connectivity_degrees(
+    inc: jnp.ndarray,
+    pres: jnp.ndarray,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """(n, k) f32 connectivity-mode degrees D* = incidence @ presence."""
+    if backend == "jnp":
+        return connectivity_degrees_ref(inc, pres)
+    if backend == "auto":
+        on_tpu = jax.default_backend() == "tpu"
+        return connectivity_matmul_pallas(inc, pres, interpret=not on_tpu)
+    if backend == "pallas":
+        return connectivity_matmul_pallas(inc, pres, interpret=False)
+    if backend == "interpret":
+        return connectivity_matmul_pallas(inc, pres, interpret=True)
     raise ValueError(f"unknown backend {backend!r}")
 
 

@@ -19,7 +19,24 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["part_onehot", "part_degrees_ref", "gain_matrix_ref"]
+__all__ = [
+    "part_onehot",
+    "part_degrees_ref",
+    "gain_matrix_ref",
+    "connectivity_degrees_ref",
+]
+
+
+def connectivity_degrees_ref(inc: jnp.ndarray, pres: jnp.ndarray) -> jnp.ndarray:
+    """(n, k) f32 connectivity-mode degrees D* = incidence @ presence.
+
+    ``inc`` is the hfire-weighted vertex×hyperedge incidence and ``pres``
+    the per-hyperedge partition presence matrix; the product sums, per
+    vertex and partition, the fire counts of incident hyperedges with a
+    member present there (the volume objective's λ-gain matrix, see
+    `repro.core.graph.volume_degrees`).
+    """
+    return inc.astype(jnp.float32) @ pres.astype(jnp.float32)
 
 
 def part_onehot(part: jnp.ndarray, k: int) -> jnp.ndarray:

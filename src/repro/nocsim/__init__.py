@@ -5,12 +5,30 @@ deterministic routing on a W x H 2D mesh, per-link bandwidth limits per
 cycle, per-core injection limits (a crossbar sends at most `capacity`
 spikes per time step), and the four paper metrics — average spike latency,
 dynamic energy, congestion count (Eq. 3) and edge variance (Eq. 4-5).
+
+Two traffic models (``simulate_noc``'s ``cast``):
+
+* ``unicast`` — every spike transmission is an independent packet; a
+  neuron whose spikes fan out over d synapses injects d packets.  This is
+  the replay model the paper's edge-cut objective implicitly assumes.
+* ``multicast`` — one packet per (firing, destination core), replicated
+  along the XY multicast tree (the union of the deterministic XY routes,
+  which share their common prefix).  Link loads, edge variance and dynamic
+  energy count each (firing, link) branch traversal once — the model the
+  ``objective="volume"`` partitioning metric (`repro.core.graph.comm_volume`)
+  optimizes, so partitioner and simulator finally measure the same
+  quantity.
 """
 from .energy import EnergyModel
-from .sim import NoCStats, simulate_noc
-from .xy import link_count, link_ids_for_routes, route_hops
+from .sim import NoCStats, dedupe_firings, simulate_noc
+from .xy import (
+    link_count,
+    link_ids_for_routes,
+    multicast_tree_links,
+    route_hops,
+)
 
 __all__ = [
-    "EnergyModel", "NoCStats", "simulate_noc",
-    "link_count", "link_ids_for_routes", "route_hops",
+    "EnergyModel", "NoCStats", "dedupe_firings", "simulate_noc",
+    "link_count", "link_ids_for_routes", "multicast_tree_links", "route_hops",
 ]

@@ -11,6 +11,19 @@ Two modes:
     congestion per Eq. 3 from per-window link loads, edge variance from
     static route expansion.  Used for property tests and fast sweeps.
 
+Two traffic models (``cast``):
+  * ``unicast`` — one packet per spike transmission (per synapse crossing);
+    the paper's replay model.
+  * ``multicast`` — one packet per (firing, destination core): a neuron
+    firing into d distinct cores injects d replicated packets, not one per
+    synapse, and the replicas of one firing share their XY route prefix as
+    a multicast tree — link loads, edge variance, and dynamic energy count
+    each (firing, link) branch traversal once (``xy.multicast_tree_links``).
+    In ``queued`` mode the replicas are *simulated* individually (latency
+    and congestion are replica-based upper bounds — a true multicast router
+    merges flits on shared branches), while link loads and energy are
+    reported with exact tree accounting.
+
 Metrics (paper §4.3): average latency, dynamic energy, congestion count,
 edge variance.
 """
@@ -20,25 +33,35 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .energy import EnergyModel
-from .xy import link_count, link_ids_for_routes, next_link, route_hops
+from repro.trace import dedupe_firings
 
-__all__ = ["NoCStats", "simulate_noc"]
+from .energy import EnergyModel
+from .xy import (
+    link_count,
+    link_ids_for_routes,
+    multicast_tree_links,
+    next_link,
+    route_hops,
+)
+
+__all__ = ["NoCStats", "dedupe_firings", "simulate_noc"]
 
 
 @dataclass
 class NoCStats:
-    avg_latency: float  # cycles, averaged over NoC-traversing spikes
+    avg_latency: float  # cycles, averaged over NoC-traversing packets
     max_latency: int
     avg_hop: float
     total_hops: int
     congestion_count: int  # Eq. 3
     edge_variance: float  # Eq. 4-5
     dynamic_energy_pj: float
-    num_noc_spikes: int
+    num_noc_spikes: int  # NoC-traversing packets (deduplicated under multicast)
     num_local_spikes: int
     cycles_simulated: int
     per_link_hops: np.ndarray = field(repr=False, default=None)
+    cast: str = "unicast"
+    link_traversals: int = 0  # == total_hops for unicast; tree links for multicast
 
 
 def _edge_stats(per_link_hops: np.ndarray) -> float:
@@ -52,12 +75,15 @@ def _analytic(
     w: int,
     h: int,
     link_capacity: int,
+    energy: EnergyModel = EnergyModel(),
+    group: np.ndarray | None = None,
     chunk_links: int = 20_000_000,
 ) -> NoCStats:
     nl = link_count(w, h)
     local = src_core == dst_core
     n_local = int(local.sum())
     t, s, d = trace_t[~local], src_core[~local], dst_core[~local]
+    g = group[~local] if group is not None else None
     hops = route_hops(s, d, w)
     total_hops = int(hops.sum())
 
@@ -66,6 +92,8 @@ def _analytic(
     # Chunk over windows to bound route-expansion memory.
     order = np.argsort(t, kind="stable")
     t, s, d = t[order], s[order], d[order]
+    if g is not None:
+        g = g[order]
     bounds = np.flatnonzero(np.diff(t)) + 1
     windows = np.split(np.arange(t.shape[0]), bounds)
     batch: list[np.ndarray] = []
@@ -75,7 +103,10 @@ def _analytic(
         nonlocal per_link
         cong = 0
         for widx in idxs:
-            ids, _ = link_ids_for_routes(s[widx], d[widx], w, h)
+            if g is None:
+                ids, _ = link_ids_for_routes(s[widx], d[widx], w, h)
+            else:
+                ids, _ = multicast_tree_links(s[widx], d[widx], g[widx], w, h)
             loads = np.bincount(ids, minlength=nl)
             per_link += loads
             cong += int(np.maximum(loads - link_capacity, 0).sum())
@@ -90,6 +121,7 @@ def _analytic(
     congestion += flush(batch)
 
     n_noc = int(t.shape[0])
+    traversals = int(per_link.sum())  # == total_hops when unicast
     return NoCStats(
         avg_latency=float(hops.mean()) if n_noc else 0.0,
         max_latency=int(hops.max()) if n_noc else 0,
@@ -97,11 +129,13 @@ def _analytic(
         total_hops=total_hops,
         congestion_count=congestion,
         edge_variance=_edge_stats(per_link),
-        dynamic_energy_pj=EnergyModel().dynamic_energy_pj(total_hops, n_local),
+        dynamic_energy_pj=energy.dynamic_energy_pj(traversals, n_local),
         num_noc_spikes=n_noc,
         num_local_spikes=n_local,
         cycles_simulated=0,
         per_link_hops=per_link,
+        cast="unicast" if group is None else "multicast",
+        link_traversals=traversals,
     )
 
 
@@ -114,16 +148,21 @@ def _queued(
     link_capacity: int,
     inject_capacity: int,
     energy: EnergyModel,
+    group: np.ndarray | None = None,
     max_cycles_per_window: int = 100_000,
 ) -> NoCStats:
     nl = link_count(w, h)
     local = src_core == dst_core
     n_local = int(local.sum())
     t, s, d = trace_t[~local], src_core[~local], dst_core[~local]
+    g = group[~local] if group is not None else None
     order = np.argsort(t, kind="stable")
     t, s, d = t[order], s[order], d[order]
+    if g is not None:
+        g = g[order]
 
     per_link = np.zeros(nl, dtype=np.int64)
+    tree_per_link = np.zeros(nl, dtype=np.int64) if g is not None else None
     total_hops = int(route_hops(s, d, w).sum())
     congestion = 0
     latencies = np.zeros(t.shape[0], dtype=np.int64)
@@ -134,6 +173,12 @@ def _queued(
         if widx.shape[0] == 0:
             continue
         ws, wd = s[widx], d[widx]
+        if g is not None:
+            # Static tree accounting, chunked per window like the analytic
+            # path (firing ids never span windows, so per-window dedup is
+            # exact and the route expansion stays bounded).
+            tids, _ = multicast_tree_links(ws, wd, g[widx], w, h)
+            tree_per_link += np.bincount(tids, minlength=nl)
         n = ws.shape[0]
         # Crossbar egress limit: the r-th spike from a core this step
         # injects at cycle r // inject_capacity.
@@ -176,6 +221,12 @@ def _queued(
         cycles_total += cycle
 
     n_noc = int(t.shape[0])
+    if g is not None:
+        # Static tree accounting overrides the replica-based link loads:
+        # link traversals and energy depend only on the XY routes, not on
+        # queueing, and a branch link carries one flit per firing.
+        per_link = tree_per_link
+    traversals = int(per_link.sum())
     return NoCStats(
         avg_latency=float(latencies.mean()) if n_noc else 0.0,
         max_latency=int(latencies.max()) if n_noc else 0,
@@ -183,11 +234,13 @@ def _queued(
         total_hops=total_hops,
         congestion_count=congestion,
         edge_variance=_edge_stats(per_link),
-        dynamic_energy_pj=energy.dynamic_energy_pj(total_hops, n_local),
+        dynamic_energy_pj=energy.dynamic_energy_pj(traversals, n_local),
         num_noc_spikes=n_noc,
         num_local_spikes=n_local,
         cycles_simulated=cycles_total,
         per_link_hops=per_link,
+        cast="unicast" if group is None else "multicast",
+        link_traversals=traversals,
     )
 
 
@@ -202,6 +255,7 @@ def simulate_noc(
     link_capacity: int = 4,
     inject_capacity: int = 256,
     mode: str = "queued",
+    cast: str = "unicast",
     energy: EnergyModel = EnergyModel(),
 ) -> NoCStats:
     """Replay a spike trace through the mapped NoC.
@@ -210,13 +264,35 @@ def simulate_noc(
       part: (num_neurons,) partition id per neuron.
       placement: (k,) core id per partition (the mapping M).
       mode: "queued" (cycle-accurate-style) or "analytic" (vectorized).
+      cast: "unicast" (one packet per transmission) or "multicast" (one
+        packet per (firing, destination core), tree link accounting).
     """
     core_of_neuron = placement[part]
     src_core = core_of_neuron[trace_src]
     dst_core = core_of_neuron[trace_dst]
+    group = None
+    if cast == "multicast":
+        # Only NoC-bound transmissions deduplicate into packets: a
+        # core-local delivery is a synaptic event, not a packet, so every
+        # local record keeps its unicast-model energy accounting.
+        local = src_core == dst_core
+        rt, rsrc, rdst, firing = dedupe_firings(
+            trace_t[~local], trace_src[~local], dst_core[~local],
+            int(part.shape[0]), mesh_w * mesh_h,
+        )
+        trace_t = np.concatenate([trace_t[local], rt])
+        src_core = np.concatenate([src_core[local], core_of_neuron[rsrc]])
+        dst_core = np.concatenate([dst_core[local], rdst])
+        # Firing id per record; local records never enter the tree expansion
+        # (they are filtered as src_core == dst_core) so any label works.
+        group = np.concatenate([np.full(int(local.sum()), -1, dtype=np.int64),
+                                firing])
+    elif cast != "unicast":
+        raise ValueError(f"unknown cast {cast!r}")
     if mode == "analytic":
-        return _analytic(trace_t, src_core, dst_core, mesh_w, mesh_h, link_capacity)
+        return _analytic(trace_t, src_core, dst_core, mesh_w, mesh_h,
+                         link_capacity, energy, group)
     if mode == "queued":
         return _queued(trace_t, src_core, dst_core, mesh_w, mesh_h,
-                       link_capacity, inject_capacity, energy)
+                       link_capacity, inject_capacity, energy, group)
     raise ValueError(f"unknown mode {mode!r}")

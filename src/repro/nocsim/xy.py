@@ -14,7 +14,13 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["link_count", "route_hops", "next_link", "link_ids_for_routes"]
+__all__ = [
+    "link_count",
+    "route_hops",
+    "next_link",
+    "link_ids_for_routes",
+    "multicast_tree_links",
+]
 
 
 def link_count(w: int, h: int) -> int:
@@ -103,3 +109,25 @@ def link_ids_for_routes(
     h_ids, h_pkt = expand(h_start, h_len)
     v_ids, v_pkt = expand(v_start, v_len)
     return np.concatenate([h_ids, v_ids]), np.concatenate([h_pkt, v_pkt])
+
+
+def multicast_tree_links(
+    src: np.ndarray,
+    dst: np.ndarray,
+    group: np.ndarray,
+    w: int,
+    h: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Directed link ids traversed by each group's XY multicast tree.
+
+    ``group`` labels packets that replicate from one firing (same source
+    core): because XY routing is deterministic, the unicast routes of one
+    group share their common prefix, and the union of the routes is the
+    multicast tree — a branch link is traversed *once* per firing no
+    matter how many destinations lie beyond it.  Returns (link_ids,
+    group_ids), one entry per distinct (group, link) traversal.
+    """
+    ids, pkt = link_ids_for_routes(src, dst, w, h)
+    nl = link_count(w, h)
+    key = np.unique(group[pkt].astype(np.int64) * nl + ids)
+    return key % nl, key // nl

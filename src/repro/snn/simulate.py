@@ -1,9 +1,13 @@
 """Profiling phase: simulate an SNN, emit its graph + spike trace (paper §3.2).
 
-The simulator raster is post-processed into the two artifacts the rest of
-the toolchain consumes:
+The simulator raster is post-processed into the three artifacts the rest
+of the toolchain consumes:
   * the spike-weighted undirected synapse graph G(N, S) — edge weight =
-    number of spikes communicated on that synapse over the window, and
+    number of spikes communicated on that synapse over the window,
+  * the multicast hypergraph H(N, E) attached as ``graph.hyper`` — one
+    hyperedge per firing neuron holding its destination pin set with
+    per-pin spike counts (the ``objective="volume"`` partitioning metric
+    and the multicast NoC replay both derive from it), and
   * the spike trace — (time_step, src_neuron, dst_neuron) per transmission
     (a neuron firing with fan-out f contributes f trace records).
 
@@ -21,7 +25,7 @@ from pathlib import Path
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph, build_graph
+from repro.core.graph import Graph, Hypergraph, build_graph, build_hypergraph
 
 from .lif import LIFParams, lif_run
 from .topology import SNNTopology
@@ -44,6 +48,11 @@ class ProfileResult:
     @property
     def num_spikes(self) -> int:
         return int(self.trace_t.shape[0])
+
+    @property
+    def hyper(self) -> "Hypergraph | None":
+        """Multicast hypergraph view of the profiled traffic."""
+        return self.graph.hyper
 
 
 def _expand_trace(
@@ -83,13 +92,20 @@ def profile_snn(
     """Run the LIF simulation and extract graph + trace."""
     key = None
     if cache_dir is not None:
+        # "hg" marks the cache layout revision that added the hypergraph
+        # arrays; older cache files simply miss and are regenerated.
         h = hashlib.sha1(
-            f"{topo.name}/{num_steps}/{seed}/{params}/{topo.num_neurons}".encode()
+            f"{topo.name}/{num_steps}/{seed}/{params}/{topo.num_neurons}/hg".encode()
         ).hexdigest()[:16]
         key = Path(cache_dir) / f"profile_{topo.name}_{h}.npz"
         if key.exists():
             z = np.load(key, allow_pickle=False)
             graph = Graph(z["xadj"], z["adjncy"], z["adjwgt"], z["vwgt"])
+            graph.hyper = Hypergraph(
+                hxadj=z["hxadj"], hpins=z["hpins"], hwgt=z["hwgt"],
+                hsrc=z["hsrc"], hfire=z["hfire"],
+                num_vertices=int(z["num_neurons"]),
+            )
             return ProfileResult(
                 name=topo.name, graph=graph, trace_t=z["trace_t"],
                 trace_src=z["trace_src"], trace_dst=z["trace_dst"],
@@ -126,6 +142,11 @@ def profile_snn(
         dst=topo.syn_dst.astype(np.int64),
         weight=fire_counts[topo.syn_src.astype(np.int64)],
     )
+    # Multicast view: one hyperedge per source with its destination pin set.
+    graph.hyper = build_hypergraph(
+        n, topo.syn_src.astype(np.int64), topo.syn_dst.astype(np.int64),
+        fire_counts,
+    )
     seconds = time.perf_counter() - t0
     result = ProfileResult(
         name=topo.name, graph=graph, trace_t=trace_t, trace_src=trace_src,
@@ -139,5 +160,8 @@ def profile_snn(
             vwgt=graph.vwgt, trace_t=trace_t, trace_src=trace_src,
             trace_dst=trace_dst, num_neurons=n, num_steps=num_steps,
             fire_counts=fire_counts, seconds=seconds,
+            hxadj=graph.hyper.hxadj, hpins=graph.hyper.hpins,
+            hwgt=graph.hyper.hwgt, hsrc=graph.hyper.hsrc,
+            hfire=graph.hyper.hfire,
         )
     return result

@@ -1,0 +1,227 @@
+"""Multicast hypergraph objective: construction, comm_volume, exact λ-gains
+through both refinement engines, contraction invariance, and the
+objective="volume" partitioning path."""
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    build_graph,
+    build_hypergraph,
+    comm_volume,
+    edge_cut,
+    validate_partition,
+    volume_degrees,
+)
+from repro.core.coarsen import coarsen
+from repro.core.initpart import greedy_region_growing
+from repro.core.partition import sneap_partition
+from repro.core.refine import refine_level
+from repro.core.refine_vec import refine_level_vec
+
+
+def random_snn_traffic(n, m, seed=0, max_fire=20):
+    """Directed synapse lists + fire counts, as the profiler would emit."""
+    r = np.random.default_rng(seed)
+    src = r.integers(0, n, m)
+    dst = r.integers(0, n, m)
+    fire = r.integers(0, max_fire, n)
+    return src, dst, fire
+
+
+def graph_with_hyper(n, m, seed=0, max_fire=20):
+    src, dst, fire = random_snn_traffic(n, m, seed, max_fire)
+    g = build_graph(n, src, dst, fire[src])
+    g.hyper = build_hypergraph(n, src, dst, fire)
+    return g
+
+
+def brute_volume(hyper, part):
+    vol = 0
+    for e in range(hyper.num_hyperedges):
+        mem = hyper.members(e)
+        vol += int(hyper.hfire[e]) * (len({int(part[v]) for v in mem}) - 1)
+    return vol
+
+
+# ------------------------------------------------------- construction
+
+def test_build_hypergraph_dedups_and_drops_self_pins():
+    #   0 -> {1, 1, 2, 0}   (dup pin merged, self pin dropped)
+    hg = build_hypergraph(3, src=[0, 0, 0, 0], dst=[1, 1, 2, 0],
+                          fire_counts=np.array([5, 0, 0]))
+    assert hg.num_hyperedges == 1
+    assert hg.hsrc.tolist() == [0]
+    s, e = hg.hxadj[0], hg.hxadj[1]
+    assert sorted(hg.hpins[s:e].tolist()) == [1, 2]
+    assert hg.hwgt[s:e].sum() == 15  # 2 synapses to 1, 1 to 2, 5 spikes each
+    assert hg.hfire.tolist() == [5]
+
+
+def test_comm_volume_matches_bruteforce():
+    src, dst, fire = random_snn_traffic(40, 150, seed=1)
+    hg = build_hypergraph(40, src, dst, fire)
+    r = np.random.default_rng(2)
+    for _ in range(10):
+        part = r.integers(0, 5, 40)
+        assert comm_volume(hg, part) == brute_volume(hg, part)
+
+
+def test_comm_volume_equals_cut_on_unicast():
+    """Every source has exactly one pin -> the two objectives coincide."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(n=st.integers(5, 50), k=st.integers(2, 5), seed=st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def check(n, k, seed):
+        r = np.random.default_rng(seed)
+        src = np.arange(n)
+        dst = (src + r.integers(1, n, n)) % n  # one pin each, never self
+        fire = r.integers(0, 20, n)
+        g = build_graph(n, src, dst, fire[src])
+        hg = build_hypergraph(n, src, dst, fire)
+        part = r.integers(0, k, n)
+        assert comm_volume(hg, part) == edge_cut(g, part)
+
+    check()
+
+
+# ----------------------------------------------------------- λ-gains
+
+def test_volume_degrees_gains_exact():
+    """D*[v, b] - D*[v, a] == vol(part) - vol(part with v -> b), exactly."""
+    src, dst, fire = random_snn_traffic(35, 140, seed=3)
+    hg = build_hypergraph(35, src, dst, fire)
+    r = np.random.default_rng(4)
+    k = 4
+    for _ in range(5):
+        part = r.integers(0, k, 35)
+        D = volume_degrees(hg, part, k)
+        base = brute_volume(hg, part)
+        for v in r.integers(0, 35, 8):
+            a = part[v]
+            for b in range(k):
+                moved = part.copy()
+                moved[v] = b
+                assert D[v, b] - D[v, a] == base - brute_volume(hg, moved)
+
+
+def test_volume_degrees_row_subset_matches_full():
+    src, dst, fire = random_snn_traffic(50, 200, seed=5)
+    hg = build_hypergraph(50, src, dst, fire)
+    part = np.random.default_rng(6).integers(0, 6, 50)
+    full = volume_degrees(hg, part, 6)
+    rows = np.array([0, 7, 13, 49])
+    np.testing.assert_array_equal(volume_degrees(hg, part, 6, rows=rows),
+                                  full[rows])
+
+
+# ----------------------------------------------- contraction invariance
+
+def test_comm_volume_invariant_under_contraction():
+    g = graph_with_hyper(300, 1500, seed=7)
+    rng = np.random.default_rng(8)
+    levels = coarsen(g, rng, coarsen_to=32, impl="vec")
+    assert len(levels) > 2
+    part = rng.integers(0, 4, levels[-1].num_vertices)
+    vols = []
+    for coarse in reversed(levels):
+        vols.append(comm_volume(coarse.hyper, part))
+        if coarse.cmap is not None:
+            part = part[coarse.cmap]
+    assert len(set(vols)) == 1
+
+
+def test_contraction_drops_internalized_pins():
+    g = graph_with_hyper(200, 900, seed=9)
+    levels = coarsen(g, np.random.default_rng(10), coarsen_to=32)
+    assert levels[-1].hyper.num_pins < levels[0].hyper.num_pins
+
+
+def test_contraction_conserves_delivered_spike_ledger():
+    """hwgt (spikes delivered per pin) only shrinks by the deliveries that
+    became core-local: a coarse level's ledger plus its internalized
+    deliveries equals the fine level's total."""
+    g = graph_with_hyper(200, 900, seed=13)
+    levels = coarsen(g, np.random.default_rng(14), coarsen_to=32)
+    for fine, coarse in zip(levels[:-1], levels[1:]):
+        fh, ch, cmap = fine.hyper, coarse.hyper, coarse.cmap
+        src_of_pin = fh.hsrc[fh.pin_edge].astype(np.int64)
+        internal = cmap[fh.hpins.astype(np.int64)] == cmap[src_of_pin]
+        assert int(ch.hwgt.sum()) == int(fh.hwgt[~internal].sum())
+
+
+# ------------------------------------------------------- refinement
+
+def _refine_case(seed, n=120, m=600, k=6, cap=30):
+    g = graph_with_hyper(n, m, seed=seed, max_fire=9)
+    rng = np.random.default_rng(seed)
+    part = greedy_region_growing(g, k, cap, rng)
+    return g, part, k, cap
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_refine_level_volume_exact_and_monotone(seed):
+    g, part, k, cap = _refine_case(seed)
+    v0 = comm_volume(g.hyper, part)
+    refined, vol = refine_level(g, part.copy(), k, cap, objective="volume")
+    assert vol == comm_volume(g.hyper, refined)  # incremental bookkeeping exact
+    assert vol <= v0
+    validate_partition(g, refined, k, cap)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_refine_level_vec_volume_exact_and_monotone(seed):
+    g, part, k, cap = _refine_case(seed, n=400, m=2000, k=40, cap=12)
+    v0 = comm_volume(g.hyper, part)
+    refined, vol = refine_level_vec(g, part.copy(), k, cap, objective="volume")
+    assert vol == comm_volume(g.hyper, refined)
+    assert vol <= v0
+    validate_partition(g, refined, k, cap)
+
+
+def test_refine_level_vec_volume_kernel_interpret_parity():
+    g, part, k, cap = _refine_case(3, n=200, m=1000, k=66, cap=5)
+    pk, vk = refine_level_vec(g, part.copy(), k, cap, objective="volume",
+                              use_kernel=True, kernel_backend="interpret")
+    pn, vn = refine_level_vec(g, part.copy(), k, cap, objective="volume",
+                              use_kernel=False)
+    assert vk == comm_volume(g.hyper, pk)
+    np.testing.assert_array_equal(pk, pn)
+    assert vk == vn
+
+
+def test_refine_rejects_volume_without_hyper():
+    g = build_graph(10, [0, 1], [1, 2], [3, 3])
+    with pytest.raises(ValueError):
+        refine_level(g, np.zeros(10, dtype=np.int64), 2, 10, objective="volume")
+
+
+# ------------------------------------------------------- partitioning
+
+@pytest.mark.parametrize("impl", ["scalar", "vec"])
+def test_sneap_partition_volume_objective(impl):
+    g = graph_with_hyper(600, 4000, seed=11, max_fire=9)
+    cut_res = sneap_partition(g, capacity=48, seed=0, impl=impl, objective="cut")
+    vol_res = sneap_partition(g, capacity=48, seed=0, impl=impl, objective="volume")
+    assert cut_res.objective == "cut" and vol_res.objective == "volume"
+    # Both report both metrics; the volume run should not lose on its own metric.
+    assert vol_res.comm_volume == comm_volume(g.hyper, vol_res.part)
+    assert cut_res.comm_volume == comm_volume(g.hyper, cut_res.part)
+    assert vol_res.comm_volume <= cut_res.comm_volume
+    validate_partition(g, vol_res.part, vol_res.k, 48)
+
+
+def test_sneap_partition_volume_requires_hyper():
+    g = build_graph(50, np.arange(49), np.arange(1, 50), np.ones(49))
+    with pytest.raises(ValueError):
+        sneap_partition(g, capacity=10, objective="volume")
+
+
+def test_greedy_kl_volume_objective():
+    from repro.core.baselines import greedy_kl_partition
+
+    g = graph_with_hyper(150, 800, seed=12, max_fire=9)
+    res = greedy_kl_partition(g, capacity=30, seed=0, objective="volume")
+    assert res.comm_volume == comm_volume(g.hyper, res.part)
+    validate_partition(g, res.part, res.k, 30)

@@ -1,0 +1,75 @@
+"""Vectorized greedy region growing and the second-chance matching round."""
+import numpy as np
+import pytest
+
+from repro.core.coarsen import heavy_edge_matching, heavy_edge_matching_vec
+from repro.core.graph import partition_weights
+from repro.core.initpart import greedy_region_growing
+
+from conftest import random_graph
+
+
+@pytest.mark.parametrize("impl", ["scalar", "vec", "auto"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_region_growing_valid_all_impls(impl, seed):
+    g = random_graph(400, 0.03, seed=seed)
+    k, cap = 12, 50
+    part = greedy_region_growing(g, k, cap, np.random.default_rng(seed), impl=impl)
+    assert part.min() >= 0 and part.max() < k
+    assert (partition_weights(g, part, k) <= cap).all()
+
+
+def test_region_growing_vec_tight_fit_falls_back():
+    """k * capacity barely over total weight: the heap fallback must engage
+    and still produce a valid packing."""
+    g = random_graph(100, 0.05, seed=3)
+    k, cap = 10, 10  # exactly n vertices of weight 1
+    part = greedy_region_growing(g, k, cap, np.random.default_rng(0), impl="vec")
+    assert (partition_weights(g, part, k) <= cap).all()
+
+
+def test_region_growing_vec_more_regions_than_vertices():
+    g = random_graph(50, 0.1, seed=6)
+    k, cap = 80, 2
+    part = greedy_region_growing(g, k, cap, np.random.default_rng(0), impl="vec")
+    assert (partition_weights(g, part, k) <= cap).all()
+    assert part.min() >= 0 and part.max() < k
+
+
+def test_region_growing_rejects_unknown_impl():
+    g = random_graph(20, 0.2, seed=4)
+    with pytest.raises(ValueError):
+        greedy_region_growing(g, 4, 10, np.random.default_rng(0), impl="simd")
+
+
+def test_region_growing_infeasible_raises():
+    g = random_graph(50, 0.1, seed=5)
+    with pytest.raises(ValueError):
+        greedy_region_growing(g, 2, 10, np.random.default_rng(0))
+
+
+def test_second_chance_matching_closes_weight_gap():
+    """The vec matching with second-chance proposals should land within a
+    modest factor of the sequential heavy-edge matching's matched weight."""
+    seq_w = vec_w = 0
+    for seed in range(5):
+        g = random_graph(300, 0.04, seed=seed)
+        ids = np.arange(300)
+        for name, match in (
+            ("seq", heavy_edge_matching(g, np.random.default_rng(seed))),
+            ("vec", heavy_edge_matching_vec(g, np.random.default_rng(seed))),
+        ):
+            assert np.array_equal(match[match], ids)  # involution
+            matched = match != ids
+            # weight of matched edges, counted once per pair
+            w = 0
+            for v in np.nonzero(matched)[0]:
+                u = match[v]
+                if v < u:
+                    nbrs, wgts = g.neighbors(v)
+                    w += int(wgts[list(nbrs).index(u)])
+            if name == "seq":
+                seq_w += w
+            else:
+                vec_w += w
+    assert vec_w >= 0.9 * seq_w

@@ -1,0 +1,153 @@
+"""Multicast NoC model: deduplicated packet traffic, XY-tree branch
+accounting, conservation, and the cut-vs-volume end-to-end comparison."""
+import numpy as np
+import pytest
+
+from repro.core.hopcost import traffic_matrix
+from repro.nocsim import simulate_noc
+from repro.nocsim.xy import link_ids_for_routes, multicast_tree_links, route_hops
+
+
+def _trace(seed=0, n_neurons=30, n_spikes=400, timesteps=20, k=6, cores=9):
+    rng = np.random.default_rng(seed)
+    part = rng.integers(0, k, n_neurons)
+    placement = rng.permutation(cores)[:k]
+    t = np.sort(rng.integers(0, timesteps, n_spikes))
+    src = rng.integers(0, n_neurons, n_spikes)
+    dst = rng.integers(0, n_neurons, n_spikes)
+    return t, src, dst, part, placement
+
+
+# -------------------------------------------------------- traffic matrix
+
+def test_multicast_traffic_counts_distinct_packets():
+    t, src, dst, part, _ = _trace()
+    k = 6
+    uni = traffic_matrix(part, src, dst, k)
+    multi = traffic_matrix(part, src, dst, k, trace_t=t, cast="multicast")
+    assert (multi <= uni).all()
+    # Independent recount: one packet per distinct (t, src, dest partition)
+    # for remote deliveries; local (diagonal) deliveries stay per-synapse.
+    remote = {(int(ti), int(si), int(part[di]))
+              for ti, si, di in zip(t, src, dst) if part[si] != part[di]}
+    n_local = sum(1 for si, di in zip(src, dst) if part[si] == part[di])
+    assert int(multi.sum()) == len(remote) + n_local
+    assert int(np.diag(multi).sum()) == n_local == int(np.diag(uni).sum())
+
+
+def test_multicast_traffic_requires_trace_t():
+    t, src, dst, part, _ = _trace()
+    with pytest.raises(ValueError):
+        traffic_matrix(part, src, dst, 6, cast="multicast")
+
+
+def test_unicast_traffic_unchanged_by_trace_t():
+    t, src, dst, part, _ = _trace(seed=1)
+    np.testing.assert_array_equal(
+        traffic_matrix(part, src, dst, 6),
+        traffic_matrix(part, src, dst, 6, trace_t=t, cast="unicast"),
+    )
+
+
+# ------------------------------------------------------------ tree links
+
+def test_tree_links_dedup_shared_prefix():
+    # Two packets of one firing from core 0 to 2 and to 5 on a 3x3 mesh:
+    # XY routes 0->1->2 and 0->1->2->5 share links (0,1) and (1,2).
+    src = np.array([0, 0])
+    dst = np.array([2, 5])
+    group = np.array([7, 7])
+    ids, grp = multicast_tree_links(src, dst, group, 3, 3)
+    assert (grp == 7).all()
+    assert ids.shape[0] == 3  # tree: 0->1, 1->2, 2->5
+    flat, _ = link_ids_for_routes(src, dst, 3, 3)
+    assert flat.shape[0] == 5  # unicast would traverse 2 + 3
+
+
+def test_tree_links_equal_unicast_for_distinct_groups():
+    rng = np.random.default_rng(2)
+    src = rng.integers(0, 9, 50)
+    dst = rng.integers(0, 9, 50)
+    group = np.arange(50)  # every packet its own firing: no sharing
+    ids, _ = multicast_tree_links(src, dst, group, 3, 3)
+    assert ids.shape[0] == int(route_hops(src, dst, 3).sum())
+
+
+# ------------------------------------------------------------ simulation
+
+def test_multicast_conservation_analytic():
+    t, src, dst, part, placement = _trace(seed=3)
+    s = simulate_noc(t, src, dst, part, placement, 3, 3, mode="analytic",
+                     cast="multicast")
+    core = placement[part]
+    pairs = {(int(ti), int(si), int(core[di]))
+             for ti, si, di in zip(t, src, dst) if core[si] != core[di]}
+    assert s.num_noc_spikes == len(pairs)  # packets == distinct fired pairs
+    assert s.cast == "multicast"
+    assert s.link_traversals <= s.total_hops
+
+
+def test_multicast_queued_matches_analytic_static_quantities():
+    t, src, dst, part, placement = _trace(seed=4)
+    a = simulate_noc(t, src, dst, part, placement, 3, 3, mode="analytic",
+                     cast="multicast")
+    q = simulate_noc(t, src, dst, part, placement, 3, 3, mode="queued",
+                     link_capacity=10_000, cast="multicast")
+    assert a.num_noc_spikes == q.num_noc_spikes
+    assert a.total_hops == q.total_hops
+    assert a.link_traversals == q.link_traversals
+    np.testing.assert_allclose(a.edge_variance, q.edge_variance)
+    np.testing.assert_allclose(a.dynamic_energy_pj, q.dynamic_energy_pj)
+    assert q.congestion_count == 0
+    np.testing.assert_allclose(q.avg_latency, q.avg_hop)
+
+
+def test_multicast_never_costs_more_energy_than_unicast():
+    t, src, dst, part, placement = _trace(seed=5, n_spikes=1000)
+    uni = simulate_noc(t, src, dst, part, placement, 3, 3, mode="analytic")
+    multi = simulate_noc(t, src, dst, part, placement, 3, 3, mode="analytic",
+                         cast="multicast")
+    assert multi.dynamic_energy_pj <= uni.dynamic_energy_pj
+    assert multi.num_noc_spikes <= uni.num_noc_spikes
+    assert multi.link_traversals <= uni.link_traversals
+
+
+def test_multicast_keeps_every_local_delivery():
+    """Core-local deliveries are synaptic events, not packets: the dedup
+    must not collapse them, or local energy is undercounted vs unicast."""
+    t, src, dst, part, placement = _trace(seed=7, n_spikes=800)
+    uni = simulate_noc(t, src, dst, part, placement, 3, 3, mode="analytic")
+    multi = simulate_noc(t, src, dst, part, placement, 3, 3, mode="analytic",
+                         cast="multicast")
+    assert multi.num_local_spikes == uni.num_local_spikes
+
+
+def test_unicast_link_traversals_equal_hops():
+    t, src, dst, part, placement = _trace(seed=6)
+    s = simulate_noc(t, src, dst, part, placement, 3, 3, mode="analytic")
+    assert s.link_traversals == s.total_hops
+    assert s.cast == "unicast"
+
+
+# ----------------------------------------------------------- end to end
+
+def test_toolchain_volume_objective_end_to_end():
+    from repro.core import comm_volume, run_toolchain
+    from repro.snn import make_snn, profile_snn
+
+    prof = profile_snn(make_snn("smooth_320"), num_steps=250, seed=0)
+    cut = run_toolchain(prof, objective="cut", mapper_kwargs={"iters": 1500})
+    vol = run_toolchain(prof, objective="volume", mapper_kwargs={"iters": 1500})
+    cut_mc = run_toolchain(prof, objective="cut", cast="multicast",
+                           mapper_kwargs={"iters": 1500})
+    # The volume-optimized partition wins its own metric...
+    assert vol.partition.comm_volume <= cut.partition.comm_volume
+    # ...and under the same multicast replay, does not cost more energy.
+    assert vol.noc.dynamic_energy_pj <= cut_mc.noc.dynamic_energy_pj * 1.05
+    # summary() reports both metrics for every run.
+    for res in (cut, vol, cut_mc):
+        s = res.summary()
+        assert s["comm_volume"] == comm_volume(prof.hyper, res.partition.part)
+        assert s["edge_cut"] == res.partition.edge_cut
+        assert s["objective"] in ("cut", "volume") and s["cast"] in ("unicast", "multicast")
+    assert cut.cast == "unicast" and vol.cast == "multicast"
