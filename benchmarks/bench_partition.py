@@ -9,7 +9,11 @@ Also tracks:
   * the cut-vs-volume objectives (`objective` switch): communication
     volume and edge cut of both partitions on each SNN, i.e. how much
     multicast traffic the hMETIS-style connectivity-(λ−1) objective saves
-    over the paper's edge-cut objective (trajectory `objective/*`).
+    over the paper's edge-cut objective (trajectory `objective/*`); and
+  * the volume-refinement *speed gap* (trajectory `volume/*`): volume vs
+    cut wall-time through the vec engine on fan-out-heavy graphs, the
+    regime where per-move λ-gain updates used to cost 5-10x the cut path
+    before the incremental-Φ / plateau-walk refiner.
 
 ``--smoke`` runs a single small SNN + a small synthetic graph — quick
 enough for CI, so objective regressions surface there and not just
@@ -52,6 +56,35 @@ def synthetic_fanout_graph(n: int, fan: int = 12, seed: int = 0):
     g = build_graph(n, src, dst, fire[src])
     g.hyper = build_hypergraph(n, src, dst, fire)
     return g
+
+
+def volume_row(name: str, graph, capacity: int = 64) -> dict:
+    """One volume-vs-cut *speed* row through the vec engine.
+
+    Tracks ROADMAP's "volume refinement is 5-10x slower than cut" item:
+    ``time_ratio`` is volume wall-time over cut wall-time with identical
+    arguments (impl="vec"), and both objectives' comm_volume is reported
+    so speed never silently buys quality regressions.
+    """
+    t0 = time.perf_counter()
+    cut = sneap_partition(graph, capacity=capacity, seed=0, impl="vec",
+                          objective="cut")
+    t_cut = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vol = sneap_partition(graph, capacity=capacity, seed=0, impl="vec",
+                          objective="volume")
+    t_vol = time.perf_counter() - t0
+    return {
+        "name": f"volume/{name}",
+        "us_per_call": round(t_vol * 1e6, 1),
+        "derived": (
+            f"time_cut_s={t_cut:.3f};time_vol_s={t_vol:.3f};"
+            f"time_ratio={t_vol / max(t_cut, 1e-9):.2f};"
+            f"vol_of_cutopt={cut.comm_volume};vol_of_volopt={vol.comm_volume};"
+            f"volume_saved={1 - vol.comm_volume / max(cut.comm_volume, 1):.3f};"
+            f"k={vol.k}"
+        ),
+    }
 
 
 def objective_row(name: str, graph, capacity: int = 256, cut=None) -> dict:
@@ -114,6 +147,13 @@ def run(full: bool = False, smoke: bool = False) -> list[dict]:
     fan_n = 1000 if smoke else 4000
     rows.append(objective_row(f"fanout_{fan_n}",
                               synthetic_fanout_graph(fan_n), capacity=64))
+
+    # Volume-vs-cut *speed* rows (vec engine, n >= _VEC_MIN_N so the
+    # incremental-Φ/plateau-walk refiner actually engages): the ROADMAP
+    # "close the volume-refinement speed gap" trajectory.
+    rows.append(volume_row("fanout_2000", synthetic_fanout_graph(2000)))
+    if not smoke:
+        rows.append(volume_row("fanout_4000", synthetic_fanout_graph(4000)))
 
     # Large synthetic graph: the scale where the scalar engine's per-vertex
     # Python loops become impractical and the vec engine must deliver >=10x.

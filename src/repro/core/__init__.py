@@ -13,6 +13,7 @@ from .graph import (
     build_graph,
     build_hypergraph,
     comm_volume,
+    dedup_hyperedges,
     edge_cut,
     partition_weights,
     validate_partition,
@@ -25,7 +26,7 @@ from .pipeline import ToolchainResult, run_toolchain
 
 __all__ = [
     "Graph", "Hypergraph", "build_graph", "build_hypergraph",
-    "edge_cut", "comm_volume", "volume_degrees",
+    "dedup_hyperedges", "edge_cut", "comm_volume", "volume_degrees",
     "partition_weights", "validate_partition",
     "average_hop", "core_coords", "hop_distance_matrix", "swap_delta", "traffic_matrix",
     "MAPPERS", "MappingResult", "pso_search", "sa_search", "tabu_search",

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .graph import Graph, Hypergraph
+from .graph import Graph, Hypergraph, dedup_hyperedges
 
 __all__ = [
     "heavy_edge_matching",
@@ -158,6 +158,13 @@ def contract_hypergraph(hyper: Hypergraph, cmap: np.ndarray, nc: int) -> Hypergr
     Because a partition of the coarse graph induces the same member
     partition sets, ``comm_volume`` is preserved exactly under projection —
     which is what makes λ-gains exact at every level of refinement.
+
+    Hyperedges whose (source, pin set) became identical under the remap are
+    merged by ``graph.dedup_hyperedges`` (hfire and per-pin hwgt summed) —
+    also volume-preserving, since identical member sets span identical
+    partition sets.  On structured SNNs (dense layers) most hyperedges
+    collapse this way after a few levels, shrinking the Φ table and every
+    λ-gain evaluation during refinement.
     """
     hsrc = cmap[hyper.hsrc.astype(np.int64)]
     pins = cmap[hyper.hpins.astype(np.int64)]
@@ -180,14 +187,14 @@ def contract_hypergraph(hyper: Hypergraph, cmap: np.ndarray, nc: int) -> Hypergr
     counts = np.bincount(mpe, minlength=ne)
     nonempty = counts > 0
     hxadj = np.concatenate([[0], np.cumsum(counts[nonempty])]).astype(np.int64)
-    return Hypergraph(
+    return dedup_hyperedges(Hypergraph(
         hxadj=hxadj,
         hpins=mpins.astype(np.int32),
         hwgt=merged_w.astype(np.int64),
         hsrc=hsrc[nonempty].astype(np.int32),
         hfire=hyper.hfire[nonempty],
         num_vertices=nc,
-    )
+    ))
 
 
 def contract(graph: Graph, match: np.ndarray, contract_hyper: bool = True) -> Graph:

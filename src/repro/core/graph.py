@@ -32,6 +32,7 @@ __all__ = [
     "Hypergraph",
     "build_graph",
     "build_hypergraph",
+    "dedup_hyperedges",
     "edge_cut",
     "comm_volume",
     "volume_degrees",
@@ -230,6 +231,46 @@ class Hypergraph:
         s, t = self.hxadj[e], self.hxadj[e + 1]
         return np.concatenate([[self.hsrc[e]], self.hpins[s:t]])
 
+    def validate(self, check_dedup: bool = False) -> None:
+        """Raise if the structural invariants every consumer relies on fail.
+
+        Always checked: CSR offsets well-formed, array shapes consistent,
+        vertex ids in range, pins strictly increasing within each hyperedge
+        (which implies per-edge pin dedup), no pin equal to its source, and
+        non-negative weights.  ``check_dedup=True`` additionally asserts no
+        two hyperedges share the same (source, pin set) — the invariant
+        ``dedup_hyperedges`` establishes and contraction preserves.
+        """
+        ne, p, n = self.num_hyperedges, self.num_pins, self.num_vertices
+        if self.hxadj.shape != (ne + 1,) or self.hxadj[0] != 0:
+            raise ValueError("hxadj must be (E+1,) starting at 0")
+        if int(self.hxadj[-1]) != p or (np.diff(self.hxadj) < 0).any():
+            raise ValueError("hxadj must increase monotonically to num_pins")
+        if self.hwgt.shape != (p,) or self.hfire.shape != (ne,):
+            raise ValueError("hwgt/hfire shapes inconsistent with pins/edges")
+        if p and not (0 <= int(self.hpins.min()) <= int(self.hpins.max()) < n):
+            raise ValueError("pin ids outside [0, num_vertices)")
+        if ne and not (0 <= int(self.hsrc.min()) <= int(self.hsrc.max()) < n):
+            raise ValueError("source ids outside [0, num_vertices)")
+        if (self.hwgt < 0).any() or (self.hfire < 0).any():
+            raise ValueError("negative hyperedge weights")
+        pe = self.pin_edge
+        if (self.hpins == self.hsrc[pe]).any():
+            raise ValueError("pin equals its hyperedge's source")
+        interior = np.ones(p, dtype=bool)
+        if p:
+            starts = self.hxadj[:-1]
+            interior[starts[starts < p]] = False  # first pin of each edge
+        if (np.diff(self.hpins.astype(np.int64), prepend=-1)[interior] <= 0).any():
+            raise ValueError("pins not strictly increasing within a hyperedge")
+        if check_dedup and ne > 1:
+            deduped = dedup_hyperedges(self)
+            if deduped.num_hyperedges != ne:
+                raise ValueError(
+                    f"{ne - deduped.num_hyperedges} duplicate (source, pin set) "
+                    "hyperedges present"
+                )
+
 
 def build_hypergraph(
     num_vertices: int,
@@ -264,6 +305,111 @@ def build_hypergraph(
         hsrc=esrc.astype(np.int32),
         hfire=fire_counts[esrc].astype(np.int64),
         num_vertices=num_vertices,
+    )
+
+
+# Distinct splitmix64 seeds for the two independent pin-set hashes below.
+_DEDUP_SEED_1 = np.uint64(0x9E3779B97F4A7C15)
+_DEDUP_SEED_2 = np.uint64(0xD1B54A32D192ED03)
+
+
+def _mix64(x: np.ndarray, seed: np.uint64) -> np.ndarray:
+    """splitmix64 finalizer over uint64 values (vectorized, wrapping)."""
+    z = x + seed
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+def dedup_hyperedges(hyper: Hypergraph) -> Hypergraph:
+    """Merge hyperedges with identical (source, pin set), summing weights.
+
+    Two hyperedges with the same source and the same pin set have identical
+    member sets, so they span the same partitions under *every* partition
+    vector: merging them while summing ``hfire`` (and per-pin ``hwgt``)
+    preserves ``comm_volume``, ``volume_degrees``, and the delivered-spike
+    ledger exactly.  Contraction mass-produces such duplicates on structured
+    SNNs (every source in a dense layer ends up with the same coarse pin
+    set), and each duplicate removed shrinks the Φ table and every λ-gain
+    evaluation at that level — see ``coarsen.contract_hypergraph``.
+
+    Identity is established exactly: edges are grouped by (source, degree,
+    two independent 64-bit pin-set hashes) and neighbors in the sorted
+    order are verified pin-by-pin before merging, so a hash collision can
+    only ever *miss* a merge, never create a wrong one.  Relies on pins
+    being sorted within each hyperedge (a ``Hypergraph`` invariant; see
+    ``validate``).  Surviving edges keep the first-occurrence order of
+    their group's lowest original edge id, so the result is deterministic.
+    """
+    ne = hyper.num_hyperedges
+    # Duplicates need at least two hyperedges sharing a source.
+    if ne <= 1 or np.unique(hyper.hsrc).shape[0] == ne:
+        return hyper
+    d = np.diff(hyper.hxadj)
+    pins64 = hyper.hpins.astype(np.uint64)
+    h1 = np.zeros(ne, dtype=np.uint64)
+    h2 = np.zeros(ne, dtype=np.uint64)
+    nonempty = np.nonzero(d > 0)[0]
+    if nonempty.shape[0]:
+        starts = hyper.hxadj[:-1][nonempty]
+        h1[nonempty] = np.add.reduceat(_mix64(pins64, _DEDUP_SEED_1), starts)
+        h2[nonempty] = np.add.reduceat(_mix64(pins64, _DEDUP_SEED_2), starts)
+    order = np.lexsort((h2, h1, d, hyper.hsrc))
+    src_o, d_o = hyper.hsrc[order], d[order]
+    same = np.zeros(ne, dtype=bool)
+    same[1:] = (
+        (src_o[1:] == src_o[:-1]) & (d_o[1:] == d_o[:-1])
+        & (h1[order][1:] == h1[order][:-1]) & (h2[order][1:] == h2[order][:-1])
+    )
+    if same.any():
+        # Verify candidate pairs pin-by-pin (positions align: equal degree,
+        # both sorted).  A mismatching pair starts a new group instead.
+        ci = np.nonzero(same)[0]
+        ia, _ = csr_gather(hyper.hxadj, order[ci - 1])
+        ib, _ = csr_gather(hyper.hxadj, order[ci])
+        cnt = d[order[ci]]
+        nz = np.nonzero(cnt > 0)[0]
+        if nz.shape[0]:
+            pos = (np.cumsum(cnt) - cnt)[nz]
+            mism = np.add.reduceat(hyper.hpins[ia] != hyper.hpins[ib], pos)
+            same[ci[nz[mism > 0]]] = False
+    if not same.any():
+        return hyper
+
+    grp = np.cumsum(~same) - 1  # group id per sorted position
+    ngrp = int(grp[-1]) + 1
+    # Representative of each group: its lowest original edge id (keeps the
+    # output order stable under permutations of the input).
+    rep = np.full(ngrp, ne, dtype=np.int64)
+    np.minimum.at(rep, grp, order)
+    hfire_new = np.zeros(ngrp, dtype=np.int64)
+    np.add.at(hfire_new, grp, hyper.hfire[order])
+
+    perm = np.argsort(rep, kind="stable")  # group -> output rank
+    rank = np.empty(ngrp, dtype=np.int64)
+    rank[perm] = np.arange(ngrp)
+    rep_out = rep[perm]
+    out_d = d[rep_out]
+    hxadj_new = np.concatenate([[0], np.cumsum(out_d)]).astype(np.int64)
+
+    # Scatter every member's pins into its group's output rows; pin j of a
+    # member aligns with pin j of the representative, so hwgt sums
+    # positionwise and hpins writes are idempotent across members.
+    idx, local = csr_gather(hyper.hxadj, order)
+    within = idx - np.repeat(hyper.hxadj[:-1][order], d[order])
+    out_pos = hxadj_new[:-1][rank[grp[local]]] + within
+    total = int(hxadj_new[-1])
+    hwgt_new = np.zeros(total, dtype=np.int64)
+    np.add.at(hwgt_new, out_pos, hyper.hwgt[idx])
+    hpins_new = np.zeros(total, dtype=np.int32)
+    hpins_new[out_pos] = hyper.hpins[idx]
+    return Hypergraph(
+        hxadj=hxadj_new,
+        hpins=hpins_new,
+        hwgt=hwgt_new,
+        hsrc=hyper.hsrc[rep_out],
+        hfire=hfire_new[perm],
+        num_vertices=hyper.num_vertices,
     )
 
 

@@ -88,6 +88,7 @@ def sneap_partition(
     impl: str = "scalar",
     objective: str = "cut",
     hyper: Hypergraph | None = None,
+    plateau_rounds: int | None = None,
 ) -> PartitionResult:
     """Partition an SNN graph into k parts of <= `capacity` neurons each.
 
@@ -101,13 +102,19 @@ def sneap_partition(
          matching + batched refinement; see module docstring).  "vec"
          adapts: graphs under ``_VEC_MIN_N`` vertices run the scalar
          algorithms outright, and during uncoarsening small few-partition
-         levels delegate to the scalar FM refiner (`refine_vec` bounds).
+         *cut* levels delegate to the scalar FM refiner (`refine_vec`
+         bounds); volume levels always use the vec refiner (incremental Φ
+         + plateau walk — faster than the λ-gain FM queue at equal
+         quality).
       objective: "cut" (spikes on cut synapses) or "volume" (multicast
          communication volume over the hypergraph; see module docstring).
       hyper: multicast hypergraph; defaults to ``graph.hyper`` and, when
          passed explicitly, overrides it (without mutating the caller's
          graph).  Required for ``objective="volume"``; when present,
          ``comm_volume`` is reported on the result under either objective.
+      plateau_rounds: stall budget of the vec refiner's Jet-style
+         zero/negative-gain plateau walk (quality <-> time knob; None =
+         per-objective default, 0 disables).  Ignored by ``impl="scalar"``.
     """
     if impl not in ("scalar", "vec"):
         raise ValueError(f"unknown partitioning impl {impl!r}")
@@ -151,7 +158,8 @@ def sneap_partition(
         from .refine_vec import uncoarsen_vec
 
         part, score = uncoarsen_vec(levels, coarse_part, k, capacity,
-                                    max_nonimproving, objective=objective)
+                                    max_nonimproving, objective=objective,
+                                    plateau_rounds=plateau_rounds)
     else:
         part, score = uncoarsen(levels, coarse_part, k, capacity,
                                 max_nonimproving, objective=objective)

@@ -181,6 +181,37 @@ class VolumeState:
         self.phi[eids, src] -= 1
         self.phi[eids, dst] += 1
 
+    def apply_moves(self, movers: np.ndarray, srcs: np.ndarray,
+                    dsts: np.ndarray) -> None:
+        """Batch Φ update for a *conflict-free* mover set.
+
+        Callers must guarantee no two movers share a hyperedge (the vec
+        refiner's Luby round does) — then every (hyperedge, column) pair
+        below is touched at most once and plain fancy indexing is exact.
+        """
+        idx, local = csr_gather(self.vxadj, movers)
+        eids = self.vedges[idx]
+        self.phi[eids, srcs[local]] -= 1
+        self.phi[eids, dsts[local]] += 1
+
+    def touched_moves(self, movers: np.ndarray, srcs: np.ndarray,
+                      dsts: np.ndarray) -> np.ndarray:
+        """Batch form of ``touched`` for a conflict-free mover set.
+
+        Call *after* ``apply_moves``; returns every vertex whose cached D*
+        row may have changed, applying the same critical-edge filter (only
+        hyperedges where a move crossed a presence threshold invalidate
+        their members — see ``touched``).
+        """
+        idx, local = csr_gather(self.vxadj, movers)
+        eids = self.vedges[idx]
+        critical = ((self.phi[eids, srcs[local]] <= 1)
+                    | (self.phi[eids, dsts[local]] <= 2))
+        eids = eids[critical]
+        pidx, _ = csr_gather(self.hyper.hxadj, eids)
+        return np.concatenate([self.hyper.hpins[pidx].astype(np.int64),
+                               self.hyper.hsrc[eids].astype(np.int64)])
+
     def touched(self, v: int, src: int, dst: int) -> np.ndarray:
         """Members whose D* rows changed when v moved src→dst.
 

@@ -30,16 +30,28 @@ Both objectives run through the same loop (selected by ``objective``):
 * ``"cut"`` — the (rows, k) degree matrix above; conflicts are graph
   adjacency.
 * ``"volume"`` — the degree matrix generalizes to the per-source
-  distinct-partition presence matrix D* of ``graph.volume_degrees``
-  (λ-gain of a move = D*[v, b] − D*[v, own], exact), and two candidates
-  conflict when they share a *hyperedge* (two pins of one source need not
-  be graph-adjacent, but their λ-gains interact).
+  distinct-partition presence matrix D* (λ-gain of a move =
+  D*[v, b] − D*[v, own], exact), and two candidates conflict when they
+  share a *hyperedge* (two pins of one source need not be graph-adjacent,
+  but their λ-gains interact).  The member-count table Φ(e, p) behind D*
+  is maintained *incrementally* across batches via the scalar engine's
+  ``refine.VolumeState`` (one small scatter per accepted mover set, the
+  batch mirror of the FM queue's per-move delta updates) instead of being
+  recounted from the partition vector every batch, and stale-gain
+  invalidation applies the same critical-edge filter: only hyperedges
+  where a move crossed a presence threshold re-activate their members.
 
-Each iteration strictly decreases the integer objective, so termination is
-guaranteed.  The batch scheme has weaker hill-climbing than the scalar
-FM-style queue (no tentative negative-gain moves), which is why
-``sneap_partition`` accepts both engines and the tests hold the vec cut to
-a small tolerance of the scalar cut rather than equality.
+When the positive-gain fixed point is reached the engine does not stop:
+a bounded Jet-style **plateau walk** runs zero- and bounded-negative-gain
+escape rounds (``gain >= -plateau_eps * internal``) through the same
+Luby/admission machinery, with two oscillation guards — a per-vertex move
+cooldown (a plateau mover sits out the next ``plateau_cooldown`` escape
+rounds) and best-seen rollback (the best partition observed is restored on
+exit, so the returned objective never regresses).  Each escape either
+opens new positive-gain moves (resetting the budget when a new best is
+reached) or burns one of ``plateau_rounds`` stall credits.  This is what
+lets the batch engine match the scalar FM queue's hill-climbing on volume
+plateaus without delegating levels to its O(n)-Python queue.
 
 For large k the dense per-partition degree matrix is also expressible as
 ``A @ onehot(part)`` — a tiled one-hot matmul the MXU eats for breakfast;
@@ -56,6 +68,7 @@ import numpy as np
 from .graph import (
     Graph,
     Hypergraph,
+    _mix64,
     comm_volume,
     csr_gather as _csr_gather,
     edge_cut,
@@ -64,30 +77,79 @@ from .graph import (
     partition_weights,
     volume_degrees,
 )
-from .refine import _MAX_DEG_ENTRIES, project, refine_level
+from .refine import _MAX_DEG_ENTRIES, VolumeState, project, refine_level
 
 __all__ = ["partition_degrees", "refine_level_vec", "uncoarsen_vec"]
 
-# Small-problem delegation bounds.  At few partitions the batched
-# positive-gain passes stall in local optima that the scalar FM queue
-# escapes (it tries negative-gain moves and undoes the failures), and the
-# queue is cheap there — so `uncoarsen_vec` hands levels with
-# n * k <= _SCALAR_NK and k <= _SCALAR_MAX_K to the scalar refiner.  Both
-# bounds matter: FM's per-move cost grows with k (a bincount plus a sort
-# of the k-wide degree vector per queue operation), so delegating a
-# many-partition level would burn the very speedup this module exists for.
+# Small-problem delegation bounds for the *cut* objective.  At few
+# partitions the batched positive-gain passes benefit from the scalar FM
+# queue's stronger hill-climbing, and the queue is cheap there — so
+# `uncoarsen_vec` hands cut levels with n * k <= _SCALAR_NK and
+# k <= _SCALAR_MAX_K to the scalar refiner.  Both bounds matter: FM's
+# per-move cost grows with k (a bincount plus a sort of the k-wide degree
+# vector per queue operation), so delegating a many-partition level would
+# burn the very speedup this module exists for.  Volume levels are *never*
+# delegated: λ-gain queue operations touch every member of every incident
+# hyperedge (fan-out × heavier than a cut bincount, and worst at coarse
+# levels where incidence density peaks), and the plateau walk closes the
+# quality gap the delegation used to paper over.
 _SCALAR_NK = 1 << 20
 _SCALAR_MAX_K = 64
-# Volume-objective λ-gain queue operations touch every member of every
-# incident hyperedge (fan-out × heavier than a cut bincount), so the vec
-# engine only hands the very coarsest levels to the scalar FM queue there.
-_SCALAR_NK_VOLUME = 1 << 15
+
+# Plateau-walk defaults: stall credits (consecutive escape rounds without
+# a new best) per objective, negative-gain tolerance as a fraction of the
+# vertex's internal degree, and the mover cooldown in escape rounds.
+# eps = 1.0 admits every move toward a partition the vertex has *any*
+# external presence in (gain >= -internal, the full boundary) — on
+# capacity-tight landscapes the barrier is feasibility rather than a
+# zero-gain plateau, and deep-negative first steps are what open chains
+# that scalar FM finds with its tentative-move window; larger eps is
+# equivalent (the external-presence condition already binds) and smaller
+# eps strands the walk at the first capacity wall.  The cut objective
+# keeps the walk off by default: its quality gap to scalar FM was already
+# within a few percent and the walk would spend the engine's headline
+# speed advantage on it.
+_PLATEAU_ROUNDS = {"cut": 0, "volume": 12}
+_PLATEAU_EPS = 1.0
+_PLATEAU_COOLDOWN = 2
+# Stall credits refund only on *meaningful* improvement (this fraction of
+# the best objective, at least 1): the jittered escapes keep shaving
+# epsilons off forever, and refunding on every new best would let the
+# walk's tail consume multiples of the descent phase's time.  A hard cap
+# of _PLATEAU_TOTAL x the credit budget bounds total escapes regardless.
+_PLATEAU_TOL = 0.002
+_PLATEAU_TOTAL = 8
+# Iteration safety net per objective: plateau escapes + recovery need far
+# more (cheap, active-set-bounded) iterations than pure positive descent.
+_MAX_ITERS = {"cut": 200, "volume": 2000}
+
+# Conflict-free mover selection runs this many iterated Luby rounds per
+# batch (see ``select_movers``).
+_LUBY_ROUNDS = 4
 
 # Densifying for the gain_eval kernel is only worthwhile on TPU and only
 # for problems whose dense form fits comfortably in HBM (adjacency (n, n)
 # for cut; incidence (n, E) for volume).
 _KERNEL_MAX_N = 4096
 _KERNEL_MIN_K = 64
+
+# Live (E, k) int32 Φ table cap (~128 MB): above it the volume path falls
+# back to from-scratch per-chunk recounts instead of incremental updates.
+_PHI_MAX_ENTRIES = 32_000_000
+
+# Cached (n, k) degree/D* matrix cap (~128 MB float64).  Degree rows are
+# independent of partition *weights* — only target choice is — so caching
+# them makes capacity-retargeting a pure masked argmax over cached rows
+# instead of a fresh incidence gather per stale target.
+_DEG_CACHE_ENTRIES = 16_000_000
+
+# Coarse volume levels are incidence-dense (hyperedges outlive vertices
+# under contraction, so per-vertex incidence degree grows every level) and
+# the per-pair gather epilogue becomes indexing-overhead-bound there.  When
+# the dense (n, E) member-incidence matrix fits this entry cap (~64 MB of
+# float64), D* rows come from one BLAS matmul against the live Φ presence
+# instead — the CPU mirror of the gain_eval kernel's connectivity mode.
+_DENSE_EVAL_ENTRIES = 8_000_000
 
 # Boundary batches share `refine._MAX_DEG_ENTRIES`: rows * k entries per
 # evaluation chunk (~128 MB of float64); larger boundaries are swept in
@@ -154,18 +216,21 @@ def _degrees_via_kernel(adj: np.ndarray, part: np.ndarray, k: int,
 
 def _volume_degrees_via_kernel(inc: np.ndarray, hyper: Hypergraph,
                                part: np.ndarray, k: int, rows: np.ndarray,
-                               backend: str) -> np.ndarray:
+                               backend: str,
+                               phi: np.ndarray | None = None) -> np.ndarray:
     """Row-subset D* via the gain_eval kernel's connectivity mode.
 
     base = B @ [Φ>0] counts every member (the row vertex included); the own
     column is overwritten with the B @ [Φ>1] gather, which demands a second
-    member — exactly ``graph.volume_degrees``.
+    member — exactly ``graph.volume_degrees``.  ``phi`` is the caller's
+    live member-count table when it maintains one (recomputed otherwise).
     """
     import jax.numpy as jnp
 
     from repro.kernels.gain_eval import connectivity_degrees
 
-    phi = edge_partition_counts(hyper, part, k)
+    if phi is None:
+        phi = edge_partition_counts(hyper, part, k)
     pres = jnp.asarray(
         np.concatenate([(phi > 0), (phi > 1)], axis=1).astype(np.float32)
     )
@@ -183,14 +248,26 @@ def refine_level_vec(
     part: np.ndarray,
     k: int,
     capacity: int,
-    max_iters: int = 200,
+    max_iters: int | None = None,
     use_kernel: bool | None = None,
     kernel_backend: str = "auto",
     objective: str = "cut",
+    plateau_rounds: int | None = None,
+    plateau_eps: float = _PLATEAU_EPS,
+    plateau_cooldown: int = _PLATEAU_COOLDOWN,
+    stats: dict | None = None,
 ) -> tuple[np.ndarray, int]:
-    """Refine ``part`` by batched positive-gain moves; returns (part, score).
+    """Refine ``part`` by batched moves; returns (part, score).
 
     ``score`` is the edge cut or communication volume per ``objective``.
+    Positive-gain batches run to a fixed point; then up to
+    ``plateau_rounds`` Jet-style zero/negative-gain escape rounds
+    (tolerance ``-plateau_eps * internal degree``, per-vertex cooldown of
+    ``plateau_cooldown`` rounds, best-seen rollback on exit) walk the
+    engine off plateaus — the returned score is the best observed and
+    never exceeds the input's.  ``plateau_rounds=None`` picks the
+    per-objective default (see ``_PLATEAU_ROUNDS``); 0 disables the walk.
+
     ``use_kernel=None`` auto-enables the gain_eval Pallas path on TPU for
     levels small enough to densify — and only when the total weight fits in
     float32's exact-integer range (< 2^24), since the kernel accumulates
@@ -211,8 +288,30 @@ def refine_level_vec(
     cut = edge_cut(graph, part) if objective == "cut" else comm_volume(hyper, part)
     if graph.adjncy.shape[0] == 0:
         return part, cut
+    if plateau_rounds is None:
+        plateau_rounds = _PLATEAU_ROUNDS[objective]
+    if max_iters is None:
+        max_iters = _MAX_ITERS[objective]
     src = graph.edge_src
     nbr = adjncy.astype(np.int64)
+    # Incremental Φ bookkeeping (the scalar FM queue's VolumeState, driven
+    # in batch mode) unless the dense (E, k) table would blow the memory
+    # cap — then each chunk recounts Φ for its incident edges from scratch.
+    vstate = None
+    dense_inc = None
+    if objective == "volume":
+        if cut == 0:
+            return part, cut  # every hyperedge spans one partition already
+        if hyper.num_hyperedges * k <= _PHI_MAX_ENTRIES:
+            vstate = VolumeState(graph, part, k)
+            ne = hyper.num_hyperedges
+            avg_inc = (hyper.num_pins + ne) / max(n, 1)
+            # Dense only where it wins: the sparse epilogue costs ~avg_inc
+            # gather-bound entries per (row, column), the matmul ne
+            # BLAS-rate flops — crossover around a 16x flop discount.
+            if n * ne <= _DENSE_EVAL_ENTRIES and avg_inc * 16 >= ne:
+                # Exact in float64: entries are hfire-weighted 0/1 sums.
+                dense_inc = _dense_incidence(hyper).astype(np.float64)
     if use_kernel is None:
         use_kernel = False
         total_w = (int(adjwgt.sum()) if objective == "cut"
@@ -247,53 +346,126 @@ def refine_level_vec(
                 return _degrees_via_kernel(dense, part, k, rows_v, kernel_backend)
             return partition_degrees(graph, part, k, rows=rows_v)
         if use_kernel:
-            return _volume_degrees_via_kernel(dense, hyper, part, k, rows_v,
-                                              kernel_backend)
+            return _volume_degrees_via_kernel(
+                dense, hyper, part, k, rows_v, kernel_backend,
+                phi=None if vstate is None else vstate.phi)
+        if dense_inc is not None:
+            # One (rows, E) @ (E, 2k) BLAS call against the live Φ
+            # presence: base counts any member, the own column demands a
+            # second one (the row vertex always sits there itself).
+            pres = np.concatenate(
+                [vstate.phi > 0, vstate.phi > 1], axis=1).astype(np.float64)
+            both = dense_inc[rows_v] @ pres
+            base, alt = both[:, :k], both[:, k:]
+            own = part[rows_v]
+            r = np.arange(rows_v.shape[0])
+            base[r, own] = alt[r, own]
+            return base
+        if vstate is not None:
+            return vstate.degrees_rows(part, rows_v)
         return volume_degrees(hyper, part, k, rows=rows_v)
 
-    def suppressed_movers(cand_idx: np.ndarray) -> np.ndarray:
-        """One Luby round: the suppressed-candidate mask for this batch.
+    def select_movers(cand_idx: np.ndarray,
+                      jitter_round: int | None = None) -> np.ndarray:
+        """Greedy conflict-free mover selection: iterated Luby rounds.
 
-        A candidate loses to any co-scoped candidate of strictly higher
-        (gain, -id) priority.  Cut: scopes are graph edges, so the pairwise
-        scan over candidates' adjacency rows is degree-bounded.  Volume:
-        scopes are hyperedges — the pairwise form would square a hub
-        edge's pin count, so instead each hyperedge reduces its candidate
-        members to one packed max priority and a candidate is suppressed
-        iff some incident edge's max beats it (O(candidate incidences),
-        no pin expansion).
+        Each round, a candidate survives if no co-scoped candidate has
+        strictly higher (gain, -id) priority; survivors join the mover
+        set, candidates co-scoped with a survivor drop out, and the
+        merely-beaten re-enter the next round.  One round alone yields
+        only a handful of movers on fan-out-heavy graphs (a hub hyperedge
+        suppresses all but one of its members), degenerating the batch
+        engine to near-sequential moves — a few rounds approach a maximal
+        independent set at a fraction of the per-iteration eval cost.
+
+        Cut: scopes are graph edges, so the pairwise scan over candidates'
+        adjacency rows is degree-bounded.  Volume: scopes are hyperedges —
+        the pairwise form would square a hub edge's pin count, so instead
+        each hyperedge reduces its candidate members to one max priority
+        and a candidate loses iff some incident edge's max beats it
+        (O(candidate incidences), no pin expansion).
+
+        ``jitter_round`` (plateau escapes) perturbs the selection priority
+        with a deterministic per-round hash of (vertex, round): consecutive
+        escape rounds then explore *different* independent sets instead of
+        replaying the same batch out and back — the deterministic-orbit
+        failure mode of batch negative-gain walks.  Applied gains stay the
+        exact cached values; only who wins the conflict changes.
         """
-        suppressed = np.zeros(n, dtype=bool)
-        if objective == "cut":
-            eidx, local = _row_edges(graph, cand_idx)
-            u, v = cand_idx[local], nbr[eidx]
-            conflict = is_cand[v]
-            u, v = u[conflict], v[conflict]
-            beaten = (gain_full[v] > gain_full[u]) | (
-                (gain_full[v] == gain_full[u]) & (v < u)
-            )
-            suppressed[u[beaten]] = True
-            return suppressed
-        # Packed (gain, -id) priority; distinct ids -> distinct keys, so
-        # per-edge maxima induce exactly the pairwise tie-breaking above.
-        gmax = int(gain_full[cand_idx].max())
-        if gmax >= (1 << 62) // (n + 1):
-            raise OverflowError("gains too large for the packed Luby keys")
-        pri = gain_full[cand_idx].astype(np.int64) * (n + 1) + (n - cand_idx)
-        vxadj, vedges = hyper.incidence()
-        eidx, local = _csr_gather(vxadj, cand_idx)
-        eids = vedges[eidx]
-        edge_max = np.full(hyper.num_hyperedges, -1, dtype=np.int64)
-        np.maximum.at(edge_max, eids, pri[local])
-        lost = edge_max[eids] > pri[local]
-        suppressed[cand_idx[local[lost]]] = True
-        return suppressed
+        g_sel = gain_full
+        if jitter_round is not None:
+            cg = gain_full[cand_idx]
+            span = float(cg.max() - cg.min())
+            if span > 0:
+                u = (_mix64(cand_idx.astype(np.uint64),
+                            np.uint64(2 * jitter_round + 1)).astype(np.float64)
+                     / float(1 << 64))
+                g_sel = gain_full.copy()
+                g_sel[cand_idx] = cg + 0.5 * span * u
+        chosen: list[np.ndarray] = []
+        remaining = cand_idx
+        if objective == "volume":
+            vxadj, vedges = hyper.incidence()
+            edge_used = np.zeros(hyper.num_hyperedges, dtype=bool)
+        else:
+            # 0 = not a candidate, 1 = still in the running, 2 = chosen.
+            status = np.zeros(n, dtype=np.int8)
+            status[cand_idx] = 1
+        for _ in range(_LUBY_ROUNDS):
+            if remaining.shape[0] == 0:
+                break
+            nr = remaining.shape[0]
+            # Segment-any over the (pair -> candidate) map as bincounts of
+            # the offending pair subset (buffered C loops; the equivalent
+            # ``np.logical_or.at`` is unbuffered and ~10x slower here).
+            if objective == "cut":
+                eidx, local = _row_edges(graph, remaining)
+                u, v = remaining[local], nbr[eidx]
+                excl = np.bincount(local[status[v] == 2], minlength=nr) > 0
+                beat = (status[v] == 1) & (
+                    (g_sel[v] > g_sel[u])
+                    | ((g_sel[v] == g_sel[u]) & (v < u))
+                )
+                lost = np.bincount(local[beat], minlength=nr) > 0
+            else:
+                # Dense (gain, -id) ranks as priorities: distinct ints that
+                # induce exactly the pairwise tie-breaking above, with no
+                # packing overflow to guard.
+                pri = np.empty(nr, dtype=np.int64)
+                pri[np.lexsort((remaining, -g_sel[remaining]))] = np.arange(
+                    nr, 0, -1)
+                eidx, local = _csr_gather(vxadj, remaining)
+                eids = vedges[eidx]
+                excl = np.bincount(local[edge_used[eids]], minlength=nr) > 0
+                edge_max = np.full(hyper.num_hyperedges, 0, dtype=np.int64)
+                np.maximum.at(edge_max, eids, pri[local])
+                lost = np.bincount(local[edge_max[eids] > pri[local]],
+                                   minlength=nr) > 0
+            win = ~excl & ~lost
+            winners = remaining[win]
+            if objective == "cut":
+                status[remaining[excl]] = 0  # out of the running for good
+            if winners.shape[0]:
+                chosen.append(winners)
+                if objective == "cut":
+                    status[winners] = 2
+                else:
+                    edge_used[eids[win[local]]] = True
+            remaining = remaining[~excl & lost]
+        if not chosen:
+            return np.empty(0, dtype=np.int64)
+        return np.concatenate(chosen)
 
-    def touched_by(moved: np.ndarray) -> np.ndarray:
+    def touched_by(moved: np.ndarray, srcs: np.ndarray,
+                   dsts: np.ndarray) -> np.ndarray:
         """Vertices whose cached gains are stale after `moved` move."""
         if objective == "cut":
             eidx, _ = _row_edges(graph, moved)
             return adjncy[eidx].astype(np.int64)
+        if vstate is not None:
+            # Critical-edge filter: only hyperedges where the move crossed
+            # a presence threshold invalidate their members' D* rows.
+            return vstate.touched_moves(moved, srcs, dsts)
         vxadj, vedges = hyper.incidence()
         eidx, _ = _csr_gather(vxadj, moved)
         ue = np.unique(vedges[eidx])
@@ -306,41 +478,176 @@ def refine_level_vec(
     # partitions) or the vertex itself moves, so each iteration only
     # re-evaluates the "active" set: last batch's movers plus their scopes.
     gain_full = np.full(n, -np.inf)
+    internal_full = np.zeros(n)
     target_full = np.full(n, -1, dtype=np.int64)
     mask = np.zeros(n, dtype=bool)
-    on_cut = part[src] != part[nbr]
-    if not on_cut.any():
-        return part, cut
-    mask[src[on_cut]] = True
+    if vstate is not None:
+        # Volume: members of multi-partition hyperedges — a pin can carry a
+        # λ-gain without sitting on any cut *graph* edge (two pins of one
+        # source need not be adjacent), so the graph boundary undershoots.
+        multi = np.nonzero((vstate.phi > 0).sum(axis=1) > 1)[0]
+        pidx, _ = _csr_gather(hyper.hxadj, multi)
+        mask[hyper.hpins[pidx].astype(np.int64)] = True
+        mask[hyper.hsrc[multi].astype(np.int64)] = True
+    else:
+        on_cut = part[src] != part[nbr]
+        if not on_cut.any():
+            return part, cut
+        mask[src[on_cut]] = True
     active = np.nonzero(mask)[0]
-    refreshed = False  # True after a full re-evaluation of stale candidates
 
-    for _ in range(max_iters):
-        # Re-evaluate active rows in chunks so the (rows, k) degree matrix
-        # stays within the memory cap.  Targets are chosen by gain alone;
-        # capacity is enforced exactly at admission time below (a full
-        # feasibility mask here would double the per-iteration (rows, k)
-        # work for a constraint that rarely binds under the k slack).
-        for lo in range(0, active.shape[0], chunk):
-            rows_v = active[lo:lo + chunk]
+    # Plateau-walk state: best-seen snapshot (rollback target), stall
+    # credits (refunded on meaningful improvement only; see _PLATEAU_TOL),
+    # the total-escape cap, and the per-vertex escape-round cooldown.
+    best_cut = cut
+    best_part = part.copy()
+    stall = 0
+    escapes = 0
+    moves_total = 0
+    it = -1
+    credit_base = cut
+    cooled_until = np.full(n, -1, dtype=np.int64)
+
+    use_deg_cache = n * k <= _DEG_CACHE_ENTRIES
+    deg_cache = np.zeros((n, k)) if use_deg_cache else None
+    # Rows whose deg_cache entry is current.  Volume rows with the row
+    # cache are maintained *incrementally* (see delta_update): a move
+    # changes a co-member's D* row in exactly two columns, so the batch
+    # applies two-column scatters instead of re-gathering whole rows —
+    # the full batch mirror of the scalar FM queue's delta updates.
+    known = np.zeros(n, dtype=bool)
+    use_delta = vstate is not None and use_deg_cache
+
+    def delta_update(moved: np.ndarray, prevp: np.ndarray,
+                     destp: np.ndarray) -> np.ndarray:
+        """Two-column D* delta scatter for a conflict-free mover batch.
+
+        Call after ``apply_moves`` (Φ holds post-move counts) and after
+        clearing ``known[moved]`` (movers share no hyperedge, so a mover's
+        row only changes through its own move — it gets a full re-eval).
+        For a move src→dst on edge e with post-move counts φs = Φ(e,src),
+        φd = Φ(e,dst), a member u with δc = [part[u] == c] sees exactly
+
+            D*[u, src] -= hfire[e]  iff φs == δsrc
+            D*[u, dst] += hfire[e]  iff φd == δdst + 1
+
+        and no other column changes.  Nonzero deltas imply φs <= 1 or
+        φd <= 2 — precisely the critical-edge filter — so non-critical
+        edges are skipped wholesale.  Returns the member vertices of the
+        critical edges (the rows whose targets must be re-chosen).
+        """
+        idx, local = _csr_gather(vstate.vxadj, moved)
+        eids = vstate.vedges[idx]
+        cs = prevp[local]
+        cd = destp[local]
+        phi_s = vstate.phi[eids, cs].astype(np.int64)
+        phi_d = vstate.phi[eids, cd].astype(np.int64)
+        crit = (phi_s <= 1) | (phi_d <= 2)
+        eids, cs, cd = eids[crit], cs[crit], cd[crit]
+        phi_s, phi_d = phi_s[crit], phi_d[crit]
+        pidx, el = _csr_gather(hyper.hxadj, eids)
+        mem = np.concatenate([hyper.hpins[pidx].astype(np.int64),
+                              hyper.hsrc[eids].astype(np.int64)])
+        j = np.concatenate([el, np.arange(eids.shape[0], dtype=np.int64)])
+        pu = part[mem]
+        w = vstate.hfire_f[eids]
+        hit_s = phi_s[j] == (cs[j] == pu)
+        hit_d = phi_d[j] == (cd[j] == pu) + 1
+        ks = known[mem] & hit_s
+        kd = known[mem] & hit_d
+        np.add.at(deg_cache, (mem[ks], cs[j][ks]), -w[j][ks])
+        np.add.at(deg_cache, (mem[kd], cd[j][kd]), w[j][kd])
+        # Only rows that actually changed re-enter the active set; a member
+        # whose both indicator thresholds were missed has a byte-identical
+        # row and an exact cached gain (feasibility staleness is caught by
+        # the global stale-target check).
+        return mem[hit_s | hit_d]
+
+    def choose_targets(rows_v: np.ndarray, deg: np.ndarray) -> None:
+        """Refresh the (gain, target) caches of ``rows_v`` from their
+        degree rows: best *feasible* foreign column under the current
+        partition weights (the scalar FM queue's walk down the degree
+        vector to the first partition with room, as one masked argmax).
+        Cumulative capacity is still enforced exactly at admission."""
+        own = part[rows_v]
+        rows = np.arange(rows_v.shape[0])
+        internal = deg[rows, own]  # advanced indexing: already a copy
+        m = np.where(pweight[None, :] + vwgt[rows_v][:, None] <= capacity,
+                     deg, -np.inf)
+        m[rows, own] = -np.inf
+        t = np.argmax(m, axis=1)
+        target_full[rows_v] = t
+        internal_full[rows_v] = internal
+        gain_full[rows_v] = m[rows, t] - internal
+
+    for it in range(max_iters):
+        # Evaluate rows whose cached degree row is missing or invalid, in
+        # chunks so the (rows, k) matrix stays within the memory cap; rows
+        # kept current by delta_update only need their target re-chosen.
+        if deg_cache is not None:
+            ka = known[active]
+            need, cached_rows = active[~ka], active[ka]
+        else:
+            need, cached_rows = active, None
+        for lo in range(0, need.shape[0], chunk):
+            rows_v = need[lo:lo + chunk]
             deg = eval_rows(rows_v)
-            own = part[rows_v]
-            rows = np.arange(rows_v.shape[0])
-            internal = deg[rows, own]  # advanced indexing: already a copy
-            deg[rows, own] = -np.inf
-            t = np.argmax(deg, axis=1)
-            target_full[rows_v] = t
-            gain_full[rows_v] = deg[rows, t] - internal
+            if deg_cache is not None:
+                deg_cache[rows_v] = deg
+                known[rows_v] = True
+            choose_targets(rows_v, deg)
+        if cached_rows is not None and cached_rows.shape[0]:
+            choose_targets(cached_rows, deg_cache[cached_rows])
+        # A cached target goes stale when its partition fills up.  Degree
+        # rows themselves only change when a co-member moves, so with the
+        # row cache retargeting is a pure masked argmax — no re-gather;
+        # without it the rows re-enter the active set for re-evaluation.
+        stale = np.isfinite(gain_full) & (pweight[target_full] + vwgt > capacity)
+        srows = np.nonzero(stale)[0]
+        if srows.shape[0]:
+            if use_deg_cache:
+                choose_targets(srows, deg_cache[srows])
+                srows = np.empty(0, dtype=np.int64)
+            else:
+                gain_full[srows] = -np.inf
         is_cand = gain_full > 0
+        plateau_move = False
+        if not is_cand.any():
+            if srows.shape[0]:
+                active = srows  # retarget the stale rows before concluding
+                continue
+            # Positive fixed point: spend a stall credit on a Jet-style
+            # escape round of zero/bounded-negative-gain moves.  Movers on
+            # cooldown sit out (oscillation guard); a vertex with no
+            # external presence toward its target (gain + internal == 0)
+            # never escapes — such moves only churn isolated vertices.
+            if (stall >= plateau_rounds
+                    or escapes >= _PLATEAU_TOTAL * plateau_rounds):
+                break
+            stall += 1
+            escapes += 1
+            plateau_move = True
+            is_cand = ((gain_full >= -plateau_eps * internal_full)
+                       & (gain_full + internal_full > 0)
+                       & (cooled_until < it))
         cand_idx = np.nonzero(is_cand)[0]
         if cand_idx.shape[0] == 0:
+            if plateau_move:
+                eligible = ((gain_full >= -plateau_eps * internal_full)
+                            & (gain_full + internal_full > 0))
+                if eligible.any():
+                    # Every escape candidate is merely on cooldown: burn
+                    # the stall credit and let the cooldowns expire instead
+                    # of ending refinement (still bounded by the credit and
+                    # total-escape caps).
+                    active = np.empty(0, dtype=np.int64)
+                    continue
             break
 
-        # One Luby round: survivors form a conflict-free set, so their
+        # Iterated Luby rounds: movers form a conflict-free set, so their
         # gains are exact and additive.  Only the candidates' own scope
         # rows are scanned, not all m edges.
-        suppressed = suppressed_movers(cand_idx)
-        movers = cand_idx[~suppressed[cand_idx]]
+        movers = select_movers(cand_idx, jitter_round=it if plateau_move else None)
         if movers.shape[0] == 0:  # unreachable: the max-priority candidate survives
             break
 
@@ -353,26 +660,51 @@ def refine_level_vec(
         admit = grouped_admission(mt, vwgt[movers], capacity - pweight)
         moved, dest, moved_gain = movers[admit], mt[admit], mg[admit]
         if moved.shape[0] == 0:
-            # Every candidate was admission-rejected under the *current*
-            # partition weights; their cached targets may be stale.  Refresh
-            # them all once, then give up if still stuck.
-            if refreshed:
-                break
-            refreshed = True
-            active = np.nonzero(is_cand)[0]
-            continue
-        refreshed = False
+            # Unreachable: the stale-target filter above guarantees every
+            # surviving candidate's target has headroom for it right now,
+            # so the top mover per target group always admits.
+            break
 
-        np.subtract.at(pweight, part[moved], vwgt[moved])
+        moves_total += moved.shape[0]
+        prev = part[moved].copy()
+        np.subtract.at(pweight, prev, vwgt[moved])
         np.add.at(pweight, dest, vwgt[moved])
         part[moved] = dest
         cut -= int(round(moved_gain.sum()))
+        if vstate is not None:
+            vstate.apply_moves(moved, prev, dest)
+        if plateau_move:
+            cooled_until[moved] = it + plateau_cooldown
+        if cut < best_cut:
+            best_cut = cut
+            best_part = part.copy()
+            if cut <= credit_base - max(1.0, _PLATEAU_TOL * credit_base):
+                stall = 0
+                credit_base = cut
 
-        # Next active set: the movers and everything co-scoped with one.
+        # Next active set: the movers, everything co-scoped with one, and
+        # the stale-target rows awaiting feasible retargeting.  Capacity-
+        # rejected movers keep their (still exact) cached gains and re-run
+        # through admission next round.
+        known[moved] = False  # a mover's own row changes in every column
+        if use_delta:
+            touched = delta_update(moved, prev, dest)
+        else:
+            touched = touched_by(moved, prev, dest)
+            if deg_cache is not None:
+                known[touched] = False
         mask[:] = False
         mask[moved] = True
-        mask[touched_by(moved)] = True
+        mask[srows] = True
+        mask[touched] = True
         active = np.nonzero(mask)[0]
+    if stats is not None:
+        # Engine introspection for tests and benchmarks (cheap counters).
+        stats["iterations"] = stats.get("iterations", 0) + it + 1
+        stats["escapes"] = stats.get("escapes", 0) + escapes
+        stats["moves"] = stats.get("moves", 0) + moves_total
+    if cut > best_cut:  # plateau walk ended below its best — roll back
+        part, cut = best_part, best_cut
     return part, cut
 
 
@@ -386,21 +718,26 @@ def uncoarsen_vec(
     scalar_nk: int = _SCALAR_NK,
     scalar_max_k: int = _SCALAR_MAX_K,
     objective: str = "cut",
+    plateau_rounds: int | None = None,
 ) -> tuple[np.ndarray, int]:
     """Walk levels coarse->fine, refining each level with whichever engine
-    its shape favors: the scalar FM queue for small few-partition levels
-    (see _SCALAR_NK/_SCALAR_MAX_K), the batched vec refiner otherwise.
-    ``max_nonimproving`` applies to the scalar-delegated levels."""
-
-    if objective == "volume":
-        scalar_nk = min(scalar_nk, _SCALAR_NK_VOLUME)
+    its shape favors: the scalar FM queue for small few-partition *cut*
+    levels (see _SCALAR_NK/_SCALAR_MAX_K), the batched vec refiner
+    otherwise.  Volume levels always use the vec refiner — with the
+    incremental Φ table and the plateau walk it matches the scalar queue's
+    quality at a fraction of the time (the λ-gain queue's per-move cost is
+    worst exactly where delegation used to send it).  ``max_nonimproving``
+    applies to the scalar-delegated levels; ``plateau_rounds`` threads
+    through to ``refine_level_vec``."""
 
     def refine(g: Graph, p: np.ndarray) -> tuple[np.ndarray, int]:
-        if k <= scalar_max_k and g.num_vertices * k <= scalar_nk:
+        if (objective == "cut" and k <= scalar_max_k
+                and g.num_vertices * k <= scalar_nk):
             return refine_level(g, p, k, capacity, max_nonimproving,
                                 objective=objective)
         return refine_level_vec(g, p, k, capacity, use_kernel=use_kernel,
-                                objective=objective)
+                                objective=objective,
+                                plateau_rounds=plateau_rounds)
 
     part, cut = refine(levels[-1], coarse_part)
     for fine, coarse in zip(reversed(levels[:-1]), reversed(levels[1:])):

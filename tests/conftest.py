@@ -1,3 +1,9 @@
+"""Shared fixtures and graph/trace builders for the test suite.
+
+The builders are the canonical way tests construct synthetic SNN traffic;
+per-file ad-hoc generators should migrate here so property tests, engine
+comparisons, and NoC tests all agree on what "a random SNN" means.
+"""
 import numpy as np
 import pytest
 
@@ -16,3 +22,89 @@ def random_graph(n: int, p: float, seed: int = 0, max_w: int = 100):
     src, dst = np.nonzero(mask)
     w = r.integers(1, max_w, src.shape[0])
     return build_graph(n, src, dst, w)
+
+
+def random_snn_traffic(n: int, pins: int, seed: int = 0, max_fire: int = 20):
+    """Directed synapse lists + fire counts, as the profiler would emit.
+
+    Returns (src, dst, fire): ``pins`` directed synapses between random
+    neuron pairs and a per-neuron fire count in [0, max_fire).
+    """
+    r = np.random.default_rng(seed)
+    src = r.integers(0, n, pins)
+    dst = r.integers(0, n, pins)
+    fire = r.integers(0, max_fire, n)
+    return src, dst, fire
+
+
+def random_hypergraph(n: int, pins: int, seed: int = 0, max_fire: int = 20):
+    """Random SNN traffic as a Graph with its multicast hypergraph attached.
+
+    ``pins`` is the number of directed synapses drawn; the hyperedge view
+    (``.hyper``) shares the same traffic, exactly as ``profile_snn`` emits.
+    """
+    from repro.core.graph import build_graph, build_hypergraph
+
+    src, dst, fire = random_snn_traffic(n, pins, seed, max_fire)
+    g = build_graph(n, src, dst, fire[src])
+    g.hyper = build_hypergraph(n, src, dst, fire)
+    return g
+
+
+def fanout_snn_graph(n: int, fan: int = 10, seed: int = 0, max_fire: int = 20):
+    """Fan-out-heavy traffic (every neuron multicasts to ``fan`` targets)
+    with the hypergraph attached — the regime where the cut and volume
+    objectives diverge most and λ-gain refinement earns its keep."""
+    from repro.core.graph import build_graph, build_hypergraph
+
+    r = np.random.default_rng(seed)
+    src = np.repeat(np.arange(n), fan)
+    dst = r.integers(0, n, n * fan)
+    fire = r.integers(1, max_fire, n)
+    g = build_graph(n, src, dst, fire[src])
+    g.hyper = build_hypergraph(n, src, dst, fire)
+    return g
+
+
+def layered_snn_graph(widths, seed: int = 0, fire: int = 5):
+    """mlp-shaped SNN: dense equal-weight fully-connected layers.
+
+    Every neuron of layer i synapses onto every neuron of layer i+1 with
+    identical weight (``fire`` spikes each) — the equal-weight-tie regime
+    that degrades naive vectorized matching, and the structured regime
+    where coarse hyperedge pin sets collapse onto each other (hyperedge
+    dedup).  Returns a Graph with the hypergraph attached.
+    """
+    from repro.core.graph import build_graph, build_hypergraph
+
+    widths = list(widths)
+    offs = np.cumsum([0] + widths)
+    n = int(offs[-1])
+    srcs, dsts = [], []
+    for i in range(len(widths) - 1):
+        a = np.arange(offs[i], offs[i + 1])
+        b = np.arange(offs[i + 1], offs[i + 2])
+        srcs.append(np.repeat(a, b.shape[0]))
+        dsts.append(np.tile(b, a.shape[0]))
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    fires = np.full(n, fire, dtype=np.int64)
+    g = build_graph(n, src, dst, fires[src])
+    g.hyper = build_hypergraph(n, src, dst, fires)
+    return g
+
+
+def random_spike_trace(seed=0, n_neurons=30, n_spikes=400, timesteps=20,
+                       k=6, cores=9):
+    """Random spike trace + partition + placement for NoC simulations.
+
+    Returns (t, src, dst, part, placement) with t sorted, matching the
+    (trace_t, trace_src, trace_dst) layout ``profile_snn`` produces.
+    """
+    r = np.random.default_rng(seed)
+    part = r.integers(0, k, n_neurons)
+    placement = r.permutation(cores)[:k]
+    t = np.sort(r.integers(0, timesteps, n_spikes))
+    src = r.integers(0, n_neurons, n_spikes)
+    dst = r.integers(0, n_neurons, n_spikes)
+    return t, src, dst, part, placement

@@ -18,21 +18,7 @@ from repro.core.partition import sneap_partition
 from repro.core.refine import refine_level
 from repro.core.refine_vec import refine_level_vec
 
-
-def random_snn_traffic(n, m, seed=0, max_fire=20):
-    """Directed synapse lists + fire counts, as the profiler would emit."""
-    r = np.random.default_rng(seed)
-    src = r.integers(0, n, m)
-    dst = r.integers(0, n, m)
-    fire = r.integers(0, max_fire, n)
-    return src, dst, fire
-
-
-def graph_with_hyper(n, m, seed=0, max_fire=20):
-    src, dst, fire = random_snn_traffic(n, m, seed, max_fire)
-    g = build_graph(n, src, dst, fire[src])
-    g.hyper = build_hypergraph(n, src, dst, fire)
-    return g
+from conftest import random_hypergraph as graph_with_hyper, random_snn_traffic
 
 
 def brute_volume(hyper, part):

@@ -1,0 +1,121 @@
+"""Property tests (hypothesis): hyperedge dedup and pin-set contraction
+are exactly metric-preserving — ``comm_volume`` and brute-force λ-gains
+are invariant under ``dedup_hyperedges`` and under contraction through
+arbitrary cmaps, at every coarsening level."""
+import numpy as np
+import pytest
+
+from repro.core.coarsen import coarsen, contract_hypergraph
+from repro.core.graph import (
+    Hypergraph,
+    comm_volume,
+    dedup_hyperedges,
+    volume_degrees,
+)
+
+from conftest import layered_snn_graph, random_hypergraph
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+def stack_duplicates(h: Hypergraph, copies: int, seed: int) -> Hypergraph:
+    """Concatenate ``copies`` randomly fire-scaled copies of every
+    hyperedge — a duplicate factory with known ground truth: dedup must
+    merge each group back to one edge with summed weights."""
+    r = np.random.default_rng(seed)
+    scale = r.integers(1, 4, copies * h.num_hyperedges)
+    d = np.diff(h.hxadj)
+    hxadj = np.concatenate([[0], np.cumsum(np.tile(d, copies))])
+    pin_scale = np.repeat(scale, np.tile(d, copies))
+    return Hypergraph(
+        hxadj=hxadj.astype(np.int64),
+        hpins=np.tile(h.hpins, copies),
+        hwgt=np.tile(h.hwgt, copies) * pin_scale,
+        hsrc=np.tile(h.hsrc, copies),
+        hfire=np.tile(h.hfire, copies) * scale,
+        num_vertices=h.num_vertices,
+    )
+
+
+@given(n=st.integers(10, 60), pins=st.integers(20, 200),
+       copies=st.integers(2, 4), k=st.integers(2, 6),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_dedup_preserves_volume_and_gains(n, pins, copies, k, seed):
+    """comm_volume and the exact λ-gain matrix D* survive dedup, and the
+    duplicate groups merge back to the original edge count with hfire and
+    the delivered-spike ledger conserved."""
+    base = random_hypergraph(n, pins, seed=seed).hyper
+    stacked = stack_duplicates(base, copies, seed)
+    deduped = dedup_hyperedges(stacked)
+    deduped.validate(check_dedup=True)
+    assert deduped.num_hyperedges == base.num_hyperedges
+    assert int(deduped.hfire.sum()) == int(stacked.hfire.sum())
+    assert int(deduped.hwgt.sum()) == int(stacked.hwgt.sum())
+    r = np.random.default_rng(seed + 1)
+    for _ in range(3):
+        part = r.integers(0, k, n)
+        assert comm_volume(stacked, part) == comm_volume(deduped, part)
+        # Equal D* matrices imply every single-vertex λ-gain is equal.
+        np.testing.assert_array_equal(volume_degrees(stacked, part, k),
+                                      volume_degrees(deduped, part, k))
+
+
+@given(n=st.integers(10, 80), pins=st.integers(20, 300),
+       nc=st.integers(2, 20), k=st.integers(2, 6),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_contraction_through_random_cmap_preserves_volume(n, pins, nc, k, seed):
+    """For any cmap, a coarse partition and its projection span identical
+    member partition sets — comm_volume and λ-gains are exactly equal."""
+    hyper = random_hypergraph(n, pins, seed=seed).hyper
+    r = np.random.default_rng(seed + 1)
+    cmap = r.integers(0, nc, n)
+    coarse = contract_hypergraph(hyper, cmap, nc)
+    coarse.validate(check_dedup=True)
+    for _ in range(3):
+        part_c = r.integers(0, k, nc)
+        assert comm_volume(coarse, part_c) == comm_volume(hyper, part_c[cmap])
+
+
+@given(seed=st.integers(0, 1000), k=st.integers(2, 8))
+@settings(max_examples=8, deadline=None)
+def test_dedup_invariant_at_every_coarsening_level(seed, k):
+    """Dedup (applied per level by contract_hypergraph) never changes
+    comm_volume at any level: the projected volume is constant down the
+    whole hierarchy, every level is duplicate-free, and re-running dedup
+    is a no-op."""
+    g = random_hypergraph(250, 1200, seed=seed)
+    rng = np.random.default_rng(seed)
+    levels = coarsen(g, rng, coarsen_to=24, impl="vec")
+    part = rng.integers(0, k, levels[-1].num_vertices)
+    vols = []
+    for coarse in reversed(levels):
+        coarse.hyper.validate(check_dedup=True)
+        assert dedup_hyperedges(coarse.hyper).num_hyperedges == \
+            coarse.hyper.num_hyperedges
+        vols.append(comm_volume(coarse.hyper, part))
+        if coarse.cmap is not None:
+            part = part[coarse.cmap]
+    assert len(set(vols)) == 1
+
+
+def test_layered_coarsening_dedups_heavily():
+    """Dense equal-weight layers are the dedup jackpot: coarse pin sets
+    collapse onto each other, so deep levels carry far fewer hyperedges
+    than sources — while every level still preserves comm_volume."""
+    g = layered_snn_graph((128, 128, 128, 128), seed=0)
+    rng = np.random.default_rng(0)
+    levels = coarsen(g, rng, coarsen_to=24, impl="vec")
+    assert len(levels) > 2
+    fine_e = levels[0].hyper.num_hyperedges
+    coarse_e = levels[-1].hyper.num_hyperedges
+    assert coarse_e < fine_e // 2, (fine_e, coarse_e)
+    part = rng.integers(0, 4, levels[-1].num_vertices)
+    vols = []
+    for coarse in reversed(levels):
+        vols.append(comm_volume(coarse.hyper, part))
+        if coarse.cmap is not None:
+            part = part[coarse.cmap]
+    assert len(set(vols)) == 1

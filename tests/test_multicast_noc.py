@@ -7,15 +7,7 @@ from repro.core.hopcost import traffic_matrix
 from repro.nocsim import simulate_noc
 from repro.nocsim.xy import link_ids_for_routes, multicast_tree_links, route_hops
 
-
-def _trace(seed=0, n_neurons=30, n_spikes=400, timesteps=20, k=6, cores=9):
-    rng = np.random.default_rng(seed)
-    part = rng.integers(0, k, n_neurons)
-    placement = rng.permutation(cores)[:k]
-    t = np.sort(rng.integers(0, timesteps, n_spikes))
-    src = rng.integers(0, n_neurons, n_spikes)
-    dst = rng.integers(0, n_neurons, n_spikes)
-    return t, src, dst, part, placement
+from conftest import random_spike_trace as _trace
 
 
 # -------------------------------------------------------- traffic matrix

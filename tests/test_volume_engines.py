@@ -1,0 +1,117 @@
+"""Cross-engine volume refinement: scalar FM vs the vec engine's
+incremental-Φ + plateau-walk path (metamorphic 5% parity, strict plateau
+improvement), and the vec coarsening round-count regression pin on
+mlp-shaped layered graphs."""
+import numpy as np
+import pytest
+
+from repro.core.coarsen import coarsen
+from repro.core.graph import comm_volume, validate_partition
+from repro.core.initpart import greedy_region_growing
+from repro.core.refine import refine_level
+from repro.core.refine_vec import refine_level_vec, uncoarsen_vec
+
+from conftest import fanout_snn_graph, layered_snn_graph
+
+
+# Seeded sweep: (n, k, capacity, seed).  The n=1500 cases sit at
+# n * k = 90_000 — far above the old `_SCALAR_NK_VOLUME` (1 << 15)
+# delegation bound the vec engine used to hand such levels to the scalar
+# FM queue under, so parity there is earned by the plateau walk, not by
+# delegation.
+SWEEP = [
+    (400, 40, 12, 0),
+    (400, 40, 12, 1),
+    (400, 40, 12, 2),
+    (400, 40, 12, 3),
+    (1500, 60, 30, 0),
+    (1500, 60, 30, 3),
+]
+
+
+@pytest.mark.parametrize("n,k,cap,seed", SWEEP)
+def test_cross_engine_volume_within_5pct(n, k, cap, seed):
+    """Metamorphic: both engines refine the same seeded partition of the
+    same fan-out-heavy graph to comm_volume within 5% of each other."""
+    g = fanout_snn_graph(n, seed=seed)
+    rng = np.random.default_rng(seed)
+    p0 = greedy_region_growing(g, k, cap, rng)
+    ps, vs = refine_level(g, p0.copy(), k, cap, objective="volume")
+    pv, vv = refine_level_vec(g, p0.copy(), k, cap, objective="volume")
+    assert vs == comm_volume(g.hyper, ps)
+    assert vv == comm_volume(g.hyper, pv)
+    validate_partition(g, pv, k, cap)
+    assert vv <= 1.05 * vs, f"vec {vv} vs scalar {vs} ({vv / vs:.3f}x)"
+    # and the vec engine never does worse than its own input
+    assert vv <= comm_volume(g.hyper, p0)
+
+
+def test_plateau_walk_strictly_improves():
+    """The Jet-style escape rounds must beat the walk-free vec engine on a
+    case where positive-gain batches alone stall (capacity-tight fan-out),
+    with the escape counter proving the walk actually fired."""
+    g = fanout_snn_graph(400, seed=0)
+    k, cap = 40, 12
+    rng = np.random.default_rng(0)
+    p0 = greedy_region_growing(g, k, cap, rng)
+    _, v_nowalk = refine_level_vec(g, p0.copy(), k, cap, objective="volume",
+                                   plateau_rounds=0)
+    stats: dict = {}
+    pw, v_walk = refine_level_vec(g, p0.copy(), k, cap, objective="volume",
+                                  stats=stats)
+    assert v_walk == comm_volume(g.hyper, pw)
+    assert stats["escapes"] > 0
+    assert v_walk < v_nowalk, (v_walk, v_nowalk)
+
+
+def test_plateau_walk_never_regresses():
+    """Best-seen rollback: with the walk on, the result is never worse
+    than with it off, across seeds (negative-gain escapes must not leak)."""
+    for seed in range(3):
+        g = fanout_snn_graph(250, seed=seed)
+        k, cap = 25, 12
+        rng = np.random.default_rng(seed)
+        p0 = greedy_region_growing(g, k, cap, rng)
+        _, v_off = refine_level_vec(g, p0.copy(), k, cap, objective="volume",
+                                    plateau_rounds=0)
+        _, v_on = refine_level_vec(g, p0.copy(), k, cap, objective="volume")
+        assert v_on <= v_off
+
+
+def test_uncoarsen_vec_volume_never_delegates_to_scalar(monkeypatch):
+    """Volume levels must run the vec refiner even at small n*k (the old
+    `_SCALAR_NK_VOLUME` delegation is gone — the λ-gain FM queue is slowest
+    exactly where it used to be delegated to)."""
+    import repro.core.refine_vec as rv
+
+    def boom(*a, **kw):
+        raise AssertionError("volume level delegated to scalar refine_level")
+
+    monkeypatch.setattr(rv, "refine_level", boom)
+    g = fanout_snn_graph(300, seed=1)
+    k, cap = 12, 32
+    rng = np.random.default_rng(1)
+    levels = coarsen(g, rng, coarsen_to=4 * k, max_vwgt=cap // 3, impl="vec")
+    coarse_part = greedy_region_growing(levels[-1], k, cap, rng)
+    part, vol = uncoarsen_vec(levels, coarse_part, k, cap, objective="volume")
+    assert vol == comm_volume(g.hyper, part)
+    # ... while cut levels of the same shape still delegate.
+    with pytest.raises(AssertionError, match="delegated"):
+        uncoarsen_vec(levels, coarse_part, k, cap, objective="cut")
+
+
+def test_vec_coarsening_rounds_on_layered_graph():
+    """Regression pin (ROADMAP: degree-aware role-split candidates): on an
+    mlp_2048-shaped dense equal-weight layered graph at ~2k vertices, the
+    vec engine's coarsening round count (levels built) must stay within 2x
+    of the scalar engine's."""
+    g = layered_snn_graph((512, 512, 512, 512), seed=0)
+    assert g.num_vertices == 2048
+    scalar_levels = coarsen(g, np.random.default_rng(0), coarsen_to=128,
+                            max_vwgt=85, impl="scalar", contract_hyper=False)
+    vec_levels = coarsen(g, np.random.default_rng(0), coarsen_to=128,
+                         max_vwgt=85, impl="vec", contract_hyper=False)
+    scalar_rounds = len(scalar_levels) - 1
+    vec_rounds = len(vec_levels) - 1
+    assert vec_levels[-1].num_vertices <= 2 * scalar_levels[-1].num_vertices
+    assert vec_rounds <= 2 * scalar_rounds, (vec_rounds, scalar_rounds)
