@@ -17,11 +17,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale runs (all 5 SNNs, Table 1 spike counts)")
     ap.add_argument("--only", choices=["partition", "mapping", "overall",
-                                       "exec_time", "kernels"])
+                                       "exec_time", "kernels", "nocsim"])
     args = ap.parse_args()
 
     from . import (bench_exec_time, bench_kernels, bench_mapping_algos,
-                   bench_overall, bench_partition)
+                   bench_nocsim, bench_overall, bench_partition)
 
     suites = {
         "partition": bench_partition.run,
@@ -29,6 +29,7 @@ def main() -> None:
         "overall": bench_overall.run,
         "exec_time": bench_exec_time.run,
         "kernels": bench_kernels.run,
+        "nocsim": bench_nocsim.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -1,4 +1,5 @@
-from .ops import link_loads
+from .ops import edge_variance, flatten_link_maps, link_loads, window_link_loads
 from .ref import link_loads_ref
 
-__all__ = ["link_loads", "link_loads_ref"]
+__all__ = ["edge_variance", "flatten_link_maps", "link_loads",
+           "link_loads_ref", "window_link_loads"]

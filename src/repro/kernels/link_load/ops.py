@@ -1,13 +1,24 @@
-"""Public wrapper: per-link XY load maps + edge variance."""
+"""Public wrappers: per-link XY load maps, edge variance, window screening.
+
+``window_link_loads`` is the NoC replay's hot-path entry point: it turns a
+batch of per-window core-to-core traffic matrices into flat per-link load
+vectors (the ``repro.nocsim.xy`` directed-link id layout), which the
+batched queued engine uses to screen contention-free windows without any
+cycle stepping.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.nocsim.xy import link_count
 
 from .kernel import link_loads_pallas
 from .ref import link_loads_ref
 
-__all__ = ["link_loads", "edge_variance"]
+__all__ = ["link_loads", "edge_variance", "flatten_link_maps",
+           "window_link_loads"]
 
 
 def link_loads(
@@ -31,6 +42,62 @@ def link_loads(
         return link_loads_pallas(traffic, x, y, mesh_w=mesh_w, mesh_h=mesh_h,
                                  interpret=True)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def flatten_link_maps(
+    e: jnp.ndarray, w_: jnp.ndarray, s: jnp.ndarray, n: jnp.ndarray,
+    mesh_w: int, mesh_h: int,
+) -> jnp.ndarray:
+    """Concatenate (E, W, S, N) maps into the flat directed-link id layout.
+
+    Row-major raveling of each map lands every entry exactly at its
+    ``repro.nocsim.xy`` link id: ``east[y, x] -> y*(W-1)+x`` and so on for
+    the W/S/N blocks, so the result aligns with ``link_ids_for_routes``
+    bincounts.  Maps may arrive padded (Pallas kernel output); only the
+    leading (H, W-1) / (W, H-1) blocks are real.
+    """
+    e = e[:mesh_h, :mesh_w - 1]
+    w_ = w_[:mesh_h, :mesh_w - 1]
+    s = s[:mesh_w, :mesh_h - 1]
+    n = n[:mesh_w, :mesh_h - 1]
+    return jnp.concatenate([e.ravel(), w_.ravel(), s.ravel(), n.ravel()])
+
+
+def window_link_loads(
+    traffic: np.ndarray,
+    mesh_w: int,
+    mesh_h: int,
+    backend: str = "auto",
+    chunk: int = 256,
+) -> np.ndarray:
+    """Per-window flat link loads from (B, K, K) core-to-core traffic.
+
+    K must equal ``mesh_w * mesh_h`` (each matrix row/col is a mesh core in
+    row-major coordinates).  Returns an int64 (B, num_links) array in the
+    ``xy`` link id layout.  Loads are computed in f32 on device (exact for
+    per-window counts below 2**24) and batched ``chunk`` windows at a time
+    to bound device memory.
+    """
+    k = mesh_w * mesh_h
+    if traffic.shape[-2:] != (k, k):
+        raise ValueError(f"traffic must be (B, {k}, {k}), got {traffic.shape}")
+    x = jnp.arange(k, dtype=jnp.int32) % mesh_w
+    y = jnp.arange(k, dtype=jnp.int32) // mesh_w
+
+    def one(c):
+        maps = link_loads(c, x, y, mesh_w, mesh_h, backend=backend)
+        return flatten_link_maps(*maps, mesh_w, mesh_h)
+
+    # The jnp oracle vmaps cleanly; the Pallas kernel goes through lax.map
+    # (a scan — one trace, no vmap batching rule needed for pallas_call).
+    batched = jax.vmap(one) if backend == "jnp" else (lambda b: jax.lax.map(one, b))
+    out = []
+    for lo in range(0, traffic.shape[0], chunk):
+        batch = jnp.asarray(traffic[lo:lo + chunk], dtype=jnp.float32)
+        out.append(np.asarray(batched(batch)))
+    nl = link_count(mesh_w, mesh_h)
+    loads = np.concatenate(out) if out else np.empty((0, nl), dtype=np.float32)
+    return np.rint(loads).astype(np.int64)
 
 
 def edge_variance(

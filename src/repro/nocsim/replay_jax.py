@@ -1,0 +1,121 @@
+"""Optional JAX device path for the joint congested-window stepper.
+
+A ``lax.while_loop`` version of `replay._joint_stepper` for large traces:
+fixed-size state (no compaction), one fused device pass per NoC cycle.
+Grant decisions mirror the numpy stepper exactly — per window-tagged link,
+the ``link_capacity`` oldest-injected packets win, stable by record order —
+so latencies and congestion are identical; only the execution substrate
+differs.  Imported lazily by ``simulate_noc(stepper="jax")`` so the default
+numpy path never pays the JAX import.
+
+Runs under JAX's default 32-bit ints: the wrapper checks that window-tagged
+link ids, cycles, and the blocked-packet count all fit, and refuses
+otherwise (fall back to the numpy stepper).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["joint_stepper_jax"]
+
+_SENTINEL = np.int32(2**31 - 1)
+
+
+def _next_link_jnp(cur, dst, w: int, h: int):
+    """jnp mirror of ``xy.next_link`` (single XY step -> next core, link)."""
+    cx, cy = cur % w, cur // w
+    dx, dy = dst % w, dst // w
+    e_base = 0
+    w_base = (w - 1) * h
+    s_base = 2 * (w - 1) * h
+    n_base = s_base + w * (h - 1)
+
+    go_e = cx < dx
+    go_w = cx > dx
+    go_s = (cx == dx) & (cy < dy)
+    go_n = (cx == dx) & (cy > dy)
+
+    nxt = cur
+    link = jnp.full(cur.shape, -1, dtype=jnp.int32)
+    nxt = jnp.where(go_e, cur + 1, nxt)
+    link = jnp.where(go_e, e_base + cy * (w - 1) + cx, link)
+    nxt = jnp.where(go_w, cur - 1, nxt)
+    link = jnp.where(go_w, w_base + cy * (w - 1) + (cx - 1), link)
+    nxt = jnp.where(go_s, cur + w, nxt)
+    link = jnp.where(go_s, s_base + cx * (h - 1) + cy, link)
+    nxt = jnp.where(go_n, cur - w, nxt)
+    link = jnp.where(go_n, n_base + cx * (h - 1) + (cy - 1), link)
+    return nxt, link
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w", "h", "nl", "capacity", "max_cycles"))
+def _run(cur, wd, inject, win, *, w: int, h: int, nl: int, capacity: int,
+         max_cycles: int):
+    n = cur.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        _, arrived, _, _, _, cycle = state
+        return (~jnp.all(arrived)) & (cycle < max_cycles)
+
+    def body(state):
+        cur, arrived, lat, cong, over, cycle = state
+        active = (~arrived) & (inject <= cycle)
+        nxt, link = _next_link_jnp(cur, wd, w, h)
+        tag = jnp.where(active, win * nl + link, _SENTINEL)
+        order = jnp.lexsort((idx, inject, tag))
+        st = tag[order]
+        newg = jnp.concatenate([jnp.ones(1, dtype=bool), st[1:] != st[:-1]])
+        start = lax.cummax(jnp.where(newg, idx, 0))
+        go_sorted = ((idx - start) < capacity) & active[order]
+        go = jnp.zeros(n, dtype=bool).at[order].set(go_sorted)
+        cong = cong + active.sum(dtype=jnp.int32) - go.sum(dtype=jnp.int32)
+        # Latch before a 32-bit wrap is possible: per-cycle growth is < n
+        # <= 2^30 (guarded in the wrapper), so cong passes 2^30 before it
+        # can exceed 2^31.
+        over = over | (cong >= jnp.int32(1 << 30))
+        cur = jnp.where(go, nxt, cur)
+        newly = go & (cur == wd)
+        lat = jnp.where(newly, cycle + 1, lat)
+        return cur, arrived | newly, lat, cong, over, cycle + 1
+
+    init = (cur, jnp.zeros(n, dtype=bool), jnp.zeros(n, dtype=jnp.int32),
+            jnp.int32(0), jnp.bool_(False), jnp.int32(0))
+    _, arrived, lat, cong, over, cycle = lax.while_loop(cond, body, init)
+    return lat, cong, jnp.all(arrived), over
+
+
+def joint_stepper_jax(
+    src: np.ndarray,
+    dst: np.ndarray,
+    inject: np.ndarray,
+    win: np.ndarray,
+    w: int,
+    h: int,
+    nl: int,
+    link_capacity: int,
+    max_cycles: int,
+) -> tuple[np.ndarray, int]:
+    """Drop-in device replacement for ``replay._joint_stepper``."""
+    n_cwin = int(win.max()) + 1 if win.shape[0] else 0
+    if (n_cwin * nl >= int(_SENTINEL) or max_cycles >= int(_SENTINEL)
+            or src.shape[0] >= 1 << 30):
+        raise ValueError("trace too large for the 32-bit JAX stepper; "
+                         "use stepper='numpy'")
+    lat, cong, drained, over = _run(
+        jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+        jnp.asarray(inject, jnp.int32), jnp.asarray(win, jnp.int32),
+        w=w, h=h, nl=nl, capacity=link_capacity, max_cycles=max_cycles)
+    if bool(over):
+        raise ValueError("blocked-packet count exceeds 32 bits; "
+                         "use stepper='numpy'")
+    if not bool(drained):
+        raise RuntimeError("NoC window failed to drain — capacity too low?")
+    return np.asarray(lat, dtype=np.int64), int(cong)

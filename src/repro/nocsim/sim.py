@@ -1,41 +1,51 @@
 """Trace-driven NoC simulation (evaluation phase, Noxim++ substitute).
 
-Two modes:
-  * ``queued`` — cycle-stepped simulation with per-link bandwidth and
-    per-core injection limits.  Each SNN time step opens a fresh window;
-    all spikes of the step are injected (subject to the crossbar's
-    256-spikes-per-step egress limit) and simulated until drained.  This
-    mirrors how Noxim++ replays a spike trace when the SNN time step is
-    much longer than the NoC clock.
-  * ``analytic`` — fully vectorized: latency = hop count (+ no queueing),
-    congestion per Eq. 3 from per-window link loads, edge variance from
-    static route expansion.  Used for property tests and fast sweeps.
+Mode x cast matrix (what each combination computes):
 
-Two traffic models (``cast``):
-  * ``unicast`` — one packet per spike transmission (per synapse crossing);
-    the paper's replay model.
-  * ``multicast`` — one packet per (firing, destination core): a neuron
-    firing into d distinct cores injects d replicated packets, not one per
-    synapse, and the replicas of one firing share their XY route prefix as
-    a multicast tree — link loads, edge variance, and dynamic energy count
-    each (firing, link) branch traversal once (``xy.multicast_tree_links``).
-    In ``queued`` mode the replicas are *simulated* individually (latency
-    and congestion are replica-based upper bounds — a true multicast router
-    merges flits on shared branches), while link loads and energy are
-    reported with exact tree accounting.
+  * ``queued`` / ``unicast`` — cycle-stepped replay, one packet per spike
+    transmission.  The default ``engine="batched"`` is a two-tier replay
+    (`repro.nocsim.replay`): windows whose per-cycle link demand provably
+    fits ``link_capacity`` — screened from whole-window link loads and the
+    static XY schedule (latency = injection stagger + hops), optionally via
+    the ``kernels/link_load`` indicator-matmul maps — are scored
+    analytically with zero cycle stepping; all congested windows are then
+    stepped *jointly* in one vectorized loop (window-tagged link
+    arbitration, hot-link-only sorting, analytic tail finish), optionally
+    on device via ``stepper="jax"``.  Stats are bit-identical to the scalar
+    reference engine, kept as ``engine="ref"`` (`_queued_ref`).
+  * ``queued`` / ``multicast`` — true tree-fork flits: one flit per firing
+    forks at branch routers (state per (firing, tree link); a child link
+    becomes requestable the cycle after its parent is granted; one
+    traversal per tree link).  Latency and congestion are those of a real
+    multicast router — strictly tighter than ``engine="ref"``, which
+    simulates every (firing, destination core) replica individually and is
+    retained as the documented upper bound.  Link loads and dynamic energy
+    use exact tree accounting under both engines.
+  * ``analytic`` / either cast — fully vectorized, no queueing: latency =
+    hop count, congestion per Eq. 3 from per-window link loads, edge
+    variance from static route expansion.  Used for property tests and
+    fast sweeps.
+
+Queued replays canonicalize record order within each time step before
+simulating (and deduplicate into firings under multicast), so every
+reported stat is invariant to how the profiler ordered simultaneous
+spikes.  Each SNN time step opens a fresh window; all spikes of the step
+are injected (subject to the crossbar's per-step egress limit) and
+simulated until drained, mirroring how Noxim++ replays a spike trace when
+the SNN time step is much longer than the NoC clock.
 
 Metrics (paper §4.3): average latency, dynamic energy, congestion count,
 edge variance.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-
 import numpy as np
 
 from repro.trace import dedupe_firings
 
 from .energy import EnergyModel
+from .replay import queued_multicast_tree, queued_unicast
+from .stats import NoCStats, edge_stats
 from .xy import (
     link_count,
     link_ids_for_routes,
@@ -45,27 +55,6 @@ from .xy import (
 )
 
 __all__ = ["NoCStats", "dedupe_firings", "simulate_noc"]
-
-
-@dataclass
-class NoCStats:
-    avg_latency: float  # cycles, averaged over NoC-traversing packets
-    max_latency: int
-    avg_hop: float
-    total_hops: int
-    congestion_count: int  # Eq. 3
-    edge_variance: float  # Eq. 4-5
-    dynamic_energy_pj: float
-    num_noc_spikes: int  # NoC-traversing packets (deduplicated under multicast)
-    num_local_spikes: int
-    cycles_simulated: int
-    per_link_hops: np.ndarray = field(repr=False, default=None)
-    cast: str = "unicast"
-    link_traversals: int = 0  # == total_hops for unicast; tree links for multicast
-
-
-def _edge_stats(per_link_hops: np.ndarray) -> float:
-    return float(np.var(per_link_hops))
 
 
 def _analytic(
@@ -128,7 +117,7 @@ def _analytic(
         avg_hop=float(total_hops / max(n_noc, 1)),
         total_hops=total_hops,
         congestion_count=congestion,
-        edge_variance=_edge_stats(per_link),
+        edge_variance=edge_stats(per_link),
         dynamic_energy_pj=energy.dynamic_energy_pj(traversals, n_local),
         num_noc_spikes=n_noc,
         num_local_spikes=n_local,
@@ -139,7 +128,7 @@ def _analytic(
     )
 
 
-def _queued(
+def _queued_ref(
     trace_t: np.ndarray,
     src_core: np.ndarray,
     dst_core: np.ndarray,
@@ -151,6 +140,12 @@ def _queued(
     group: np.ndarray | None = None,
     max_cycles_per_window: int = 100_000,
 ) -> NoCStats:
+    """Scalar reference engine: Python loop per window, lexsorts per cycle.
+
+    Kept verbatim as the parity oracle for the batched replay
+    (`repro.nocsim.replay`) and as the replica-based multicast upper bound
+    the tree-fork engine is measured against.
+    """
     nl = link_count(w, h)
     local = src_core == dst_core
     n_local = int(local.sum())
@@ -233,7 +228,7 @@ def _queued(
         avg_hop=float(total_hops / max(n_noc, 1)),
         total_hops=total_hops,
         congestion_count=congestion,
-        edge_variance=_edge_stats(per_link),
+        edge_variance=edge_stats(per_link),
         dynamic_energy_pj=energy.dynamic_energy_pj(traversals, n_local),
         num_noc_spikes=n_noc,
         num_local_spikes=n_local,
@@ -257,6 +252,10 @@ def simulate_noc(
     mode: str = "queued",
     cast: str = "unicast",
     energy: EnergyModel = EnergyModel(),
+    engine: str = "batched",
+    stepper: str = "numpy",
+    screen: str = "numpy",
+    max_cycles_per_window: int = 100_000,
 ) -> NoCStats:
     """Replay a spike trace through the mapped NoC.
 
@@ -266,33 +265,87 @@ def simulate_noc(
       mode: "queued" (cycle-accurate-style) or "analytic" (vectorized).
       cast: "unicast" (one packet per transmission) or "multicast" (one
         packet per (firing, destination core), tree link accounting).
+      engine: "batched" (two-tier vectorized replay; tree-fork flits under
+        multicast) or "ref" (scalar reference loop; replica-based
+        multicast upper bound).  Queued mode only.
+      stepper: "numpy" or "jax" — substrate for the batched engine's joint
+        congested-window cycle loop (`repro.nocsim.replay_jax`).  Unicast
+        only: the multicast tree-fork stepper is numpy-only, so "jax" is
+        accepted but has no effect under cast="multicast".
+      screen: "numpy" (bincount over route expansion) or "linkload" /
+        "pallas" / "interpret" (per-window load maps through the
+        ``kernels/link_load`` machinery) — backend for the batched
+        engine's whole-window contention screen.  The choice never changes
+        results, only where the screening work runs.
     """
+    if mode not in ("queued", "analytic"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if engine not in ("batched", "ref"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if stepper not in ("numpy", "jax"):
+        raise ValueError(f"unknown stepper {stepper!r}")
+    if screen not in ("numpy", "linkload", "pallas", "interpret", "jnp"):
+        raise ValueError(f"unknown screen {screen!r}")
     core_of_neuron = placement[part]
     src_core = core_of_neuron[trace_src]
     dst_core = core_of_neuron[trace_dst]
-    group = None
+    # Canonical record order within each time step: queued stats must
+    # depend on the multiset of simultaneous records, not on the order the
+    # profiler emitted them (injection-stagger and arbitration tie-breaks
+    # would otherwise leak emission order into latencies).
+    ncores = mesh_w * mesh_h
+    tmax = int(trace_t.max()) + 1 if trace_t.shape[0] else 1
+    if tmax * ncores * ncores < np.iinfo(np.int64).max // 4:
+        packed = ((trace_t.astype(np.int64) * ncores + src_core) * ncores
+                  + dst_core)
+        order = np.argsort(packed, kind="stable")
+    else:
+        order = np.lexsort((dst_core, src_core, trace_t))
+    trace_t = trace_t[order]
+    trace_src = trace_src[order]
+    src_core = src_core[order]
+    dst_core = dst_core[order]
+    local = src_core == dst_core
+    n_local = int(local.sum())
+
     if cast == "multicast":
         # Only NoC-bound transmissions deduplicate into packets: a
         # core-local delivery is a synaptic event, not a packet, so every
         # local record keeps its unicast-model energy accounting.
-        local = src_core == dst_core
         rt, rsrc, rdst, firing = dedupe_firings(
             trace_t[~local], trace_src[~local], dst_core[~local],
             int(part.shape[0]), mesh_w * mesh_h,
         )
-        trace_t = np.concatenate([trace_t[local], rt])
-        src_core = np.concatenate([src_core[local], core_of_neuron[rsrc]])
-        dst_core = np.concatenate([dst_core[local], rdst])
-        # Firing id per record; local records never enter the tree expansion
-        # (they are filtered as src_core == dst_core) so any label works.
-        group = np.concatenate([np.full(int(local.sum()), -1, dtype=np.int64),
-                                firing])
-    elif cast != "unicast":
+        rsrc_core = core_of_neuron[rsrc]
+        if mode == "analytic" or engine == "ref":
+            # Replica-record layout (locals first; they are filtered on a
+            # src_core == dst_core test inside, so any group label works).
+            trace_t = np.concatenate([trace_t[local], rt])
+            src_core = np.concatenate([src_core[local], rsrc_core])
+            dst_core = np.concatenate([dst_core[local], rdst])
+            group = np.concatenate([np.full(n_local, -1, dtype=np.int64),
+                                    firing])
+        if mode == "analytic":
+            return _analytic(trace_t, src_core, dst_core, mesh_w, mesh_h,
+                             link_capacity, energy, group)
+        if engine == "ref":
+            return _queued_ref(trace_t, src_core, dst_core, mesh_w, mesh_h,
+                               link_capacity, inject_capacity, energy, group,
+                               max_cycles_per_window)
+        return queued_multicast_tree(
+            rt, rsrc_core, rdst, firing, mesh_w, mesh_h, link_capacity,
+            inject_capacity, energy, n_local, max_cycles_per_window,
+            screen=screen)
+    if cast != "unicast":
         raise ValueError(f"unknown cast {cast!r}")
     if mode == "analytic":
         return _analytic(trace_t, src_core, dst_core, mesh_w, mesh_h,
-                         link_capacity, energy, group)
-    if mode == "queued":
-        return _queued(trace_t, src_core, dst_core, mesh_w, mesh_h,
-                       link_capacity, inject_capacity, energy, group)
-    raise ValueError(f"unknown mode {mode!r}")
+                         link_capacity, energy)
+    if engine == "ref":
+        return _queued_ref(trace_t, src_core, dst_core, mesh_w, mesh_h,
+                           link_capacity, inject_capacity, energy, None,
+                           max_cycles_per_window)
+    return queued_unicast(
+        trace_t[~local], src_core[~local], dst_core[~local], mesh_w, mesh_h,
+        link_capacity, inject_capacity, energy, n_local,
+        max_cycles_per_window, stepper=stepper, screen=screen)

@@ -1,0 +1,45 @@
+"""Result record of a NoC replay (shared by every engine).
+
+Lives in its own module so the scalar reference engine (`sim._queued_ref`),
+the batched replay (`replay`), and the analytic path can all construct the
+same record without import cycles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["NoCStats", "edge_stats"]
+
+
+@dataclass
+class NoCStats:
+    avg_latency: float  # cycles, averaged over NoC-traversing packets
+    max_latency: int
+    avg_hop: float
+    total_hops: int
+    congestion_count: int  # Eq. 3
+    edge_variance: float  # Eq. 4-5
+    dynamic_energy_pj: float
+    num_noc_spikes: int  # NoC-traversing packets (deduplicated under multicast)
+    num_local_spikes: int
+    cycles_simulated: int
+    # None only on hand-built records (engines always fill it); consumers
+    # must guard — see `max_link_load`.
+    per_link_hops: np.ndarray | None = field(repr=False, default=None)
+    cast: str = "unicast"
+    link_traversals: int = 0  # == total_hops for unicast; tree links for multicast
+
+    def max_link_load(self) -> int:
+        """Heaviest per-link traversal total (0 when loads were not kept)."""
+        if self.per_link_hops is None or self.per_link_hops.size == 0:
+            return 0
+        return int(self.per_link_hops.max())
+
+
+def edge_stats(per_link_hops: np.ndarray | None) -> float:
+    """Edge variance (Eq. 4-5) of a per-link traversal histogram."""
+    if per_link_hops is None or per_link_hops.size == 0:
+        return 0.0
+    return float(np.var(per_link_hops))

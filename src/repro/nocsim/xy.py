@@ -18,6 +18,7 @@ __all__ = [
     "link_count",
     "route_hops",
     "next_link",
+    "link_endpoints",
     "link_ids_for_routes",
     "multicast_tree_links",
 ]
@@ -63,14 +64,53 @@ def next_link(cur: np.ndarray, dst: np.ndarray, w: int, h: int) -> tuple[np.ndar
     return nxt, link
 
 
+def link_endpoints(ids: np.ndarray, w: int, h: int) -> tuple[np.ndarray, np.ndarray]:
+    """Decode directed link ids into (tail, head) core ids (layout inverse).
+
+    The tail is the router that drives the link, the head the router it
+    enters — the orientation the tree-fork flit engine forks along.
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    w_base = (w - 1) * h
+    s_base = 2 * (w - 1) * h
+    n_base = s_base + w * (h - 1)
+
+    tail = np.empty(ids.shape, dtype=np.int64)
+    head = np.empty(ids.shape, dtype=np.int64)
+
+    m = ids < w_base  # East (x,y)->(x+1,y)
+    y, x = ids[m] // (w - 1), ids[m] % (w - 1)
+    tail[m], head[m] = y * w + x, y * w + x + 1
+
+    m = (ids >= w_base) & (ids < s_base)  # West (x,y)->(x-1,y)
+    r = ids[m] - w_base
+    y, xm1 = r // (w - 1), r % (w - 1)
+    tail[m], head[m] = y * w + xm1 + 1, y * w + xm1
+
+    m = (ids >= s_base) & (ids < n_base)  # South (x,y)->(x,y+1)
+    r = ids[m] - s_base
+    x, y = r // (h - 1), r % (h - 1)
+    tail[m], head[m] = y * w + x, (y + 1) * w + x
+
+    m = ids >= n_base  # North (x,y)->(x,y-1)
+    r = ids[m] - n_base
+    x, ym1 = r // (h - 1), r % (h - 1)
+    tail[m], head[m] = (ym1 + 1) * w + x, ym1 * w + x
+    return tail, head
+
+
 def link_ids_for_routes(
-    src: np.ndarray, dst: np.ndarray, w: int, h: int
-) -> tuple[np.ndarray, np.ndarray]:
+    src: np.ndarray, dst: np.ndarray, w: int, h: int, with_steps: bool = False
+) -> tuple[np.ndarray, ...]:
     """Expand each (src, dst) pair's full XY route into directed link ids.
 
     Returns (link_ids, packet_index) — flat arrays, one entry per traversal.
-    Exploits the fact that an XY route is at most two *consecutive* runs of
-    link ids under the layout above.
+    With ``with_steps=True`` also returns the 0-based hop index of each
+    traversal along its packet's route (the cycle offset at which an
+    unobstructed packet crosses that link), which is what the batched
+    replay's contention screen schedules against.  Exploits the fact that
+    an XY route is at most two *consecutive* runs of link ids under the
+    layout above.
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
@@ -97,18 +137,29 @@ def link_ids_for_routes(
         np.where(north, n_base + dx * (h - 1) + dy, 0),  # N ids (y-1) = dy .. sy-1
     )
 
-    def expand(starts: np.ndarray, lens: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    def expand(starts, lens):
         total = int(lens.sum())
         if total == 0:
-            return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+            e = np.empty(0, dtype=np.int64)
+            return e, e, e
         pkt = np.repeat(np.arange(lens.shape[0]), lens)
         cum = np.concatenate([[0], np.cumsum(lens)])
         within = np.arange(total) - np.repeat(cum[:-1], lens)
-        return np.repeat(starts, lens) + within, pkt
+        return np.repeat(starts, lens) + within, pkt, within
 
-    h_ids, h_pkt = expand(h_start, h_len)
-    v_ids, v_pkt = expand(v_start, v_len)
-    return np.concatenate([h_ids, v_ids]), np.concatenate([h_pkt, v_pkt])
+    h_ids, h_pkt, h_within = expand(h_start, h_len)
+    v_ids, v_pkt, v_within = expand(v_start, v_len)
+    ids = np.concatenate([h_ids, v_ids])
+    pkt = np.concatenate([h_pkt, v_pkt])
+    if not with_steps:
+        return ids, pkt
+    # Id runs ascend eastward/southward but a westbound (northbound) packet
+    # crosses its run's ids in descending order — flip `within` there.  The
+    # vertical run follows the whole horizontal run (XY order).
+    h_step = np.where(west[h_pkt], h_len[h_pkt] - 1 - h_within, h_within)
+    v_step = h_len[v_pkt] + np.where(north[v_pkt], v_len[v_pkt] - 1 - v_within,
+                                     v_within)
+    return ids, pkt, np.concatenate([h_step, v_step])
 
 
 def multicast_tree_links(

@@ -46,6 +46,34 @@ def test_all_partitions_fit_mesh(results):
         assert len(set(r.mapping.placement.tolist())) == r.partition.k
 
 
+def test_summary_reports_evaluate_seconds(results):
+    for r in results.values():
+        s = r.summary()
+        assert s["evaluate_s"] == r.phase_seconds["evaluate"] > 0.0
+        assert s["partition_s"] == r.phase_seconds["partition"]
+        assert s["mapping_s"] == r.phase_seconds["mapping"]
+
+
+def test_noc_kwargs_pass_through(profile, results):
+    """``noc_kwargs`` mirrors partition_kwargs/mapper_kwargs: forwarded to
+    simulate_noc and overriding the positional convenience args."""
+    base = results["sneap"]
+    ref = run_toolchain(profile, mesh_w=5, mesh_h=5, seed=0,
+                        mapper_kwargs={"iters": 4000},
+                        noc_kwargs={"engine": "ref"})
+    # Identical partition/mapping; batched-vs-ref NoC replay parity.
+    np.testing.assert_array_equal(ref.partition.part, base.partition.part)
+    assert ref.noc.avg_latency == base.noc.avg_latency
+    assert ref.noc.congestion_count == base.noc.congestion_count
+    uncapped = run_toolchain(profile, mesh_w=5, mesh_h=5, seed=0,
+                             mapper_kwargs={"iters": 4000},
+                             noc_kwargs={"inject_capacity": 1_000_000,
+                                         "link_capacity": 1_000_000})
+    assert uncapped.noc.congestion_count == 0
+    np.testing.assert_allclose(uncapped.noc.avg_latency,
+                               uncapped.noc.avg_hop)
+
+
 def test_sneap_partition_quality_per_time():
     """Paper Fig 4, honest form: the paper's 890x wall-time claim is against
     SpiNeMap's implementation; against our optimized greedy-KL (which
