@@ -16,7 +16,8 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale runs (all 5 SNNs, Table 1 spike counts)")
-    ap.add_argument("--only", choices=["partition", "mapping", "overall",
+    ap.add_argument("--only", choices=["partition", "mapping",
+                                       "mapping_engine", "overall",
                                        "exec_time", "kernels", "nocsim"])
     args = ap.parse_args()
 
@@ -26,6 +27,7 @@ def main() -> None:
     suites = {
         "partition": bench_partition.run,
         "mapping": bench_mapping_algos.run,
+        "mapping_engine": bench_mapping_algos.run_engines,
         "overall": bench_overall.run,
         "exec_time": bench_exec_time.run,
         "kernels": bench_kernels.run,

@@ -19,17 +19,42 @@ from .graph import (
     validate_partition,
     volume_degrees,
 )
-from .hopcost import average_hop, core_coords, hop_distance_matrix, swap_delta, traffic_matrix
-from .mapping import MAPPERS, MappingResult, pso_search, sa_search, tabu_search
+from .hopcost import (
+    average_hop,
+    core_coords,
+    hop_distance_matrix,
+    swap_delta,
+    swap_delta_batch,
+    traffic_matrix,
+)
+from .mapping import (
+    MAPPERS,
+    OBJECTIVE_AWARE_MAPPERS,
+    MappingResult,
+    pso_search,
+    sa_search,
+    tabu_search,
+)
 from .partition import PartitionResult, sneap_partition
 from .pipeline import ToolchainResult, run_toolchain
+from .placecost import (
+    PLACE_OBJECTIVES,
+    PairwiseObjective,
+    TreeHopObjective,
+    evaluate_placement,
+    make_objective,
+)
 
 __all__ = [
     "Graph", "Hypergraph", "build_graph", "build_hypergraph",
     "dedup_hyperedges", "edge_cut", "comm_volume", "volume_degrees",
     "partition_weights", "validate_partition",
-    "average_hop", "core_coords", "hop_distance_matrix", "swap_delta", "traffic_matrix",
-    "MAPPERS", "MappingResult", "pso_search", "sa_search", "tabu_search",
+    "average_hop", "core_coords", "hop_distance_matrix", "swap_delta",
+    "swap_delta_batch", "traffic_matrix",
+    "MAPPERS", "OBJECTIVE_AWARE_MAPPERS", "MappingResult",
+    "pso_search", "sa_search", "tabu_search",
+    "PLACE_OBJECTIVES", "PairwiseObjective", "TreeHopObjective",
+    "evaluate_placement", "make_objective",
     "PartitionResult", "sneap_partition",
     "greedy_kl_partition", "sco_partition", "sco_place",
     "ToolchainResult", "run_toolchain",

@@ -159,7 +159,13 @@ def sco_partition(graph: Graph, capacity: int = 256,
 
 
 def sco_place(k: int, num_cores: int) -> MappingResult:
-    """SCO placement: partitions land on cores in row-major sequence."""
+    """SCO placement: partitions land on cores in row-major sequence.
+
+    No search runs, so no metric is computed here — ``avg_hop``/``tree_hop``
+    start NaN/None and are filled by the pipeline's shared evaluator
+    (`repro.core.placecost.evaluate_placement`), the same code path every
+    other method's reported hop comes from.
+    """
     if k > num_cores:
         raise ValueError(f"{k} partitions > {num_cores} cores")
     return MappingResult(placement=np.arange(k, dtype=np.int64), avg_hop=float("nan"),

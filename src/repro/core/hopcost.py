@@ -29,6 +29,7 @@ __all__ = [
     "hop_distance_matrix",
     "average_hop",
     "swap_delta",
+    "swap_delta_batch",
 ]
 
 
@@ -125,3 +126,30 @@ def swap_delta(
     # Exclude j in {a, b}: the a<->b term is invariant (d symmetric) and the
     # self terms ride on the zero diagonal of dist but not of sym_traffic diff.
     return float(diff.sum() - diff[a] - diff[b])
+
+
+def swap_delta_batch(
+    sym_traffic: np.ndarray,
+    placement: np.ndarray,
+    dist: np.ndarray,
+    aa: np.ndarray,
+    bb: np.ndarray,
+) -> np.ndarray:
+    """`swap_delta` for B candidate pairs in one vectorized call.
+
+    Returns the (B,) array of deltas for swapping ``(aa[i], bb[i])`` — each
+    evaluated against the *same* ``placement`` (candidates are independent
+    alternatives, not a sequence).  Canonical/reference form of the batch
+    formula: the batched mapping engine's hot path is
+    `placecost.PairwiseObjective.swap_delta_batch`, which computes the same
+    quantity through its placement-permuted distance-column cache (and is
+    pinned against this function by the engine tests); the all-pairs MXU
+    form lives in `repro.kernels.swap_delta`.
+    """
+    aa = np.asarray(aa, dtype=np.int64)
+    bb = np.asarray(bb, dtype=np.int64)
+    d_a = dist[placement[aa][:, None], placement[None, :]]  # (B, K)
+    d_b = dist[placement[bb][:, None], placement[None, :]]
+    diff = (sym_traffic[aa] - sym_traffic[bb]) * (d_b - d_a)
+    rows = np.arange(aa.shape[0])
+    return diff.sum(axis=1) - diff[rows, aa] - diff[rows, bb]

@@ -15,7 +15,14 @@ reformulated for accelerators:
     device, periodically all-gathering the global best and re-seeding the
     worst chains (parallel tempering across the TPU mesh).
 
-All variants share the objective of paper Eq. 2 (minimize average hop).
+All variants share the objective of paper Eq. 2 (minimize average hop) —
+their inner loops are gather-arithmetic reformulations of the pairwise
+delta, so they do not take a `placecost` objective (see
+`mapping.OBJECTIVE_AWARE_MAPPERS`).  They are not a parallel API: every
+search here is registered in `repro.core.mapping.MAPPERS` ("sa_jax",
+"polish" via the uniform-signature `polish_search` adapter, and "island",
+which needs a `mesh=` kwarg), so `run_toolchain(mapper=...)` selects them
+like any host mapper.
 """
 from __future__ import annotations
 
@@ -31,7 +38,7 @@ from repro.kernels.swap_delta import swap_deltas
 from .hopcost import hop_distance_matrix
 from .mapping import MappingResult, pad_traffic
 
-__all__ = ["sa_search_jax", "greedy_polish", "island_sa"]
+__all__ = ["sa_search_jax", "greedy_polish", "polish_search", "island_sa"]
 
 
 def _coords(num_cores: int, mesh_w: int) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -124,6 +131,7 @@ def sa_search_jax(
     """Population SA on device + optional kernel-powered greedy polish."""
     start = time.perf_counter()
     k = traffic.shape[0]
+    trace_length = max(trace_length, 1)  # zero-traffic profiles normalize by 1
     padded = pad_traffic(np.asarray(traffic, dtype=np.float64), num_cores)
     sym = jnp.asarray(padded + padded.T, dtype=jnp.float32)
     dist = jnp.asarray(
@@ -208,6 +216,49 @@ def greedy_polish(
     return placement, int(steps)
 
 
+def polish_search(
+    traffic: np.ndarray,
+    num_cores: int,
+    mesh_w: int,
+    trace_length: int,
+    seed: int = 0,
+    init: np.ndarray | None = None,
+    max_steps: int = 256,
+    backend: str = "auto",
+    torus: bool = False,
+) -> MappingResult:
+    """Uniform-signature mapper over `greedy_polish` (registry: "polish").
+
+    Starts from ``init`` (or a seeded random permutation) and runs
+    full-neighborhood steepest descent to a swap-local optimum.  The
+    swap-delta kernel rebuilds plain Manhattan distances from coordinates,
+    so torus meshes are not supported.
+    """
+    if torus:
+        raise ValueError("polish_search is mesh-only (kernel distance is Manhattan)")
+    start = time.perf_counter()
+    k = traffic.shape[0]
+    trace_length = max(trace_length, 1)  # zero-traffic profiles normalize by 1
+    padded = pad_traffic(np.asarray(traffic, dtype=np.float64), num_cores)
+    sym = jnp.asarray(padded + padded.T, dtype=jnp.float32)
+    dist = jnp.asarray(hop_distance_matrix(num_cores, mesh_w), dtype=jnp.float32)
+    placement = (np.asarray(init, dtype=np.int64).copy() if init is not None
+                 else np.random.default_rng(seed).permutation(num_cores))
+    x, y = _coords(num_cores, mesh_w)
+    best, steps = greedy_polish(sym, jnp.asarray(placement), x, y,
+                                max_steps=max_steps, backend=backend)
+    final_cost = float(_cost(sym, best, dist))
+    seconds = time.perf_counter() - start
+    # One kernel launch scores the whole O(K^2) neighborhood per step.
+    return MappingResult(
+        placement=np.asarray(best)[:k].astype(np.int64),
+        avg_hop=final_cost / trace_length,
+        seconds=seconds,
+        history=[(float(steps), final_cost / trace_length)],
+        evaluations=int(steps) * num_cores * num_cores,
+    )
+
+
 def island_sa(
     traffic: np.ndarray,
     num_cores: int,
@@ -229,6 +280,7 @@ def island_sa(
 
     start = time.perf_counter()
     k = traffic.shape[0]
+    trace_length = max(trace_length, 1)  # zero-traffic profiles normalize by 1
     padded = pad_traffic(np.asarray(traffic, dtype=np.float64), num_cores)
     sym = jnp.asarray(padded + padded.T, dtype=jnp.float32)
     dist = jnp.asarray(

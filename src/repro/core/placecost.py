@@ -1,0 +1,455 @@
+"""Placement objectives for the mapping phase (paper §3.4, unified engine).
+
+Every mapping search (`repro.core.mapping`) scores candidate placements
+through one of the objectives defined here, so the search engines are
+objective-agnostic and the quantity the mapper minimizes can be chosen to
+match the NoC traffic model the evaluation phase simulates:
+
+* ``PairwiseObjective`` — the paper's Eq. 2: total hop-weighted pairwise
+  traffic ``sum_{i,j} d(M(i), M(j)) * C[i, j]``.  Exact for unicast
+  replay, but under multicast it double-counts shared XY-tree prefixes.
+* ``TreeHopObjective`` — the hfire-weighted XY multicast-tree link count:
+  each hyperedge (source partition, destination-partition set) pays its
+  fire count once per *link of its multicast tree*, the same accounting
+  the tree-fork replay charges per (firing, tree link) traversal
+  (`repro.nocsim.xy.multicast_tree_sizes`).  Minimizing it minimizes the
+  replay's ``link_traversals`` — and with it dynamic energy — directly.
+
+Both objectives expose the same engine-facing contract:
+
+  ``attach(placement)``          bind a placement, return its exact cost;
+  ``swap_delta(a, b)``           incremental cost change of one swap;
+  ``swap_delta_batch(aa, bb)``   (B,) independent candidate deltas;
+  ``apply_swaps(pairs)``         commit disjoint swaps, return exact cost;
+  ``total(placement)``           stateless full evaluation.
+
+The tree objective keeps its incremental state as a per-hyperedge tree-size
+cache plus a CSR partition→hyperedge incidence index, so a swap re-evaluates
+only the hyperedges incident to the two swapped partitions.  Identical
+(source partition, destination set) hyperedges are merged at construction
+(their trees are congruent under every placement), which collapses the
+neuron-granularity hypergraph to at most one entry per distinct
+partition-level multicast pattern.
+
+`evaluate_placement` is the single post-search reporting path: every
+toolchain method's ``avg_hop`` (pairwise, Fig. 5 comparability) and
+``tree_hop`` come from here, regardless of which objective drove — or
+didn't drive — the search.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.nocsim.xy import multicast_tree_sizes
+
+from .graph import Hypergraph, csr_gather
+from .hopcost import hop_distance_matrix, swap_delta
+
+__all__ = [
+    "PairwiseObjective",
+    "TreeHopObjective",
+    "make_objective",
+    "evaluate_placement",
+    "PLACE_OBJECTIVES",
+]
+
+
+class PairwiseObjective:
+    """Eq. 2 hop-weighted pairwise traffic (the paper's mapping objective).
+
+    Owns the shared search preamble — zero-padding the (k, k) traffic
+    matrix to the core count, symmetrizing it, and building the hop
+    distance matrix — that used to be copied across ``sa_search``,
+    ``tabu_search`` and ``pso_search``.
+    """
+
+    name = "pairwise"
+
+    def __init__(
+        self,
+        traffic: np.ndarray,
+        num_cores: int,
+        mesh_w: int,
+        torus: bool = False,
+    ):
+        k = int(traffic.shape[0])
+        if k > num_cores:
+            raise ValueError(f"{k} partitions > {num_cores} cores")
+        padded = np.zeros((num_cores, num_cores), dtype=np.float64)
+        padded[:k, :k] = traffic
+        self.num_partitions = k
+        self.num_positions = num_cores
+        self.sym = padded + padded.T
+        self.dist = hop_distance_matrix(num_cores, mesh_w, torus=torus).astype(
+            np.float64
+        )
+        self._placement: np.ndarray | None = None
+        # Placement-permuted distance columns, attached-state cache:
+        # _dist_p[c, j] = dist[c, placement[j]].  Lets the batch scorer use
+        # contiguous row gathers instead of broadcast fancy indexing (the
+        # difference between ~5 ms and ~0.3 ms per 512-candidate batch at
+        # 256 cores); a committed swap of positions (a, b) just swaps
+        # columns a and b.
+        self._dist_p: np.ndarray | None = None
+        self._total = 0.0
+
+    # -- stateless ---------------------------------------------------------
+    def total(self, placement: np.ndarray) -> float:
+        """Exact Eq. 2 total of a placement.
+
+        Accepts the full ``num_cores`` permutation or any prefix covering
+        the real partitions (virtual-partition traffic is zero, so the
+        truncated sum is identical) — which is what lets the shared
+        evaluator score a (k,)-length finished placement directly.
+        """
+        m = placement.shape[0]
+        if m < self.num_partitions:
+            raise ValueError(f"placement covers {m} < {self.num_partitions} partitions")
+        d = self.dist[placement[:, None], placement[None, :]]
+        return float((d * self.sym[:m, :m]).sum() / 2.0)
+
+    # -- engine-facing incremental API ------------------------------------
+    def attach(self, placement: np.ndarray) -> float:
+        self._placement = placement
+        self._dist_p = np.ascontiguousarray(self.dist[:, placement])
+        self._total = self.total(placement)
+        return self._total
+
+    def swap_delta(self, a: int, b: int) -> float:
+        return swap_delta(self.sym, self._placement, self.dist, a, b)
+
+    def swap_delta_batch(self, aa: np.ndarray, bb: np.ndarray) -> np.ndarray:
+        """Vectorized `hopcost.swap_delta_batch` over the attached placement.
+
+        Same formula, but the placed distances come from the cached
+        ``_dist_p`` columns so both distance operands are plain row
+        gathers.
+        """
+        aa = np.asarray(aa, dtype=np.int64)
+        bb = np.asarray(bb, dtype=np.int64)
+        p, dp = self._placement, self._dist_p
+        diff = (self.sym[aa] - self.sym[bb]) * (dp[p[bb]] - dp[p[aa]])
+        rows = np.arange(aa.shape[0])
+        return diff.sum(axis=1) - diff[rows, aa] - diff[rows, bb]
+
+    def apply_swaps(self, pairs: np.ndarray, total_delta: float | None = None) -> float:
+        """Commit position-disjoint swaps to the attached placement.
+
+        A single swap updates the cached total with the O(K) incremental
+        delta (``total_delta`` lets the engine hand back the delta it
+        already scored, skipping the recompute); larger batches swap all
+        positions at once and re-evaluate the O(K^2) total exactly (one
+        row gather + reduction — still far cheaper per proposal than
+        scoring the batch), so the returned cost is exact either way and
+        incremental drift cannot accumulate past the final re-evaluation.
+        """
+        pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+        p = self._placement
+        if pairs.shape[0] == 0:
+            return self._total
+        aa, bb = pairs[:, 0], pairs[:, 1]
+        if pairs.shape[0] == 1:
+            a, b = int(aa[0]), int(bb[0])
+            self._total += (self.swap_delta(a, b) if total_delta is None
+                            else total_delta)
+            p[a], p[b] = p[b], p[a]
+        else:
+            p[aa], p[bb] = p[bb].copy(), p[aa].copy()
+        self._dist_p[:, aa], self._dist_p[:, bb] = (
+            self._dist_p[:, bb].copy(), self._dist_p[:, aa].copy()
+        )
+        if pairs.shape[0] > 1:
+            self._total = float(
+                (self.sym * self._dist_p[p]).sum() / 2.0
+            )
+        return self._total
+
+
+class TreeHopObjective:
+    """hfire-weighted XY multicast-tree link count (tree-hop objective).
+
+    cost(M) = sum_e  w_e * |tree(M(src_e), {M(d) : d in dests_e})|
+
+    where e ranges over the distinct partition-level multicast patterns of
+    ``hyper`` under ``part`` (hyperedges with identical source partition
+    and destination-partition set merged, ``w_e`` their summed fire
+    counts) and ``tree`` is the union of deterministic XY routes — exactly
+    the per-firing link set the tree-fork replay traverses, so
+    ``total(placement)`` equals the multicast replay's ``link_traversals``
+    for that placement.
+
+    Swaps are scored incrementally: a CSR index maps each placement
+    position (partition) to the hyperedges it is source or destination of,
+    and only those trees are re-measured under the candidate placement.
+    """
+
+    name = "tree"
+
+    def __init__(
+        self,
+        hyper: Hypergraph,
+        part: np.ndarray,
+        num_cores: int,
+        mesh_w: int,
+        mesh_h: int | None = None,
+    ):
+        part = np.asarray(part, dtype=np.int64)
+        k = int(part.max()) + 1 if part.shape[0] else 0
+        if k > num_cores:
+            raise ValueError(f"{k} partitions > {num_cores} cores")
+        self.num_partitions = k
+        self.num_positions = num_cores
+        self.mesh_w = mesh_w
+        self.mesh_h = (
+            mesh_h if mesh_h is not None else -(-num_cores // mesh_w)
+        )
+        if self.mesh_w * self.mesh_h < num_cores:
+            raise ValueError("mesh smaller than num_cores")
+
+        # Partition-level destination sets: distinct dest partitions per
+        # hyperedge, excluding the source's own partition (core-local
+        # deliveries never enter the NoC).
+        ps_all = part[hyper.hsrc.astype(np.int64)]
+        pp = part[hyper.hpins.astype(np.int64)]
+        pe = hyper.pin_edge
+        remote = pp != ps_all[pe]
+        ukey = np.unique(pe[remote] * np.int64(max(k, 1)) + pp[remote])
+        uedge, dpart = ukey // max(k, 1), ukey % max(k, 1)
+        eids, ecount = np.unique(uedge, return_counts=True)
+
+        # Merge hyperedges whose (source partition, dest set) coincide:
+        # their multicast trees are congruent under every placement, so
+        # only the summed fire count matters.  Dest sets are compared
+        # exactly as k-bit bitset rows.
+        ne = eids.shape[0]
+        ps = ps_all[eids]
+        fire = hyper.hfire[eids].astype(np.float64)
+        nb = (k + 63) // 64 if k else 1
+        bits = np.zeros((ne, nb), dtype=np.uint64)
+        row = np.repeat(np.arange(ne, dtype=np.int64), ecount)
+        np.bitwise_or.at(
+            bits, (row, dpart >> 6), np.uint64(1) << (dpart & 63).astype(np.uint64)
+        )
+        sig = np.concatenate([ps[:, None].astype(np.uint64), bits], axis=1)
+        _, rep, inv = np.unique(sig, axis=0, return_index=True, return_inverse=True)
+        t = rep.shape[0]
+        self.tw = np.bincount(inv, weights=fire, minlength=t)
+        self.tsrc = ps[rep]
+        lens = ecount[rep]
+        self.tptr = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+        ent, _ = csr_gather(
+            np.concatenate([[0], np.cumsum(ecount)]).astype(np.int64), rep
+        )
+        self.tdst = dpart[ent]
+        self.num_hyperedges = t
+
+        # CSR position -> incident hyperedge ids (source or destination).
+        # Positions >= k (virtual partitions) have empty rows, so swaps
+        # among them are free, exactly as the pairwise objective's
+        # zero-padded traffic makes them.
+        pos = np.concatenate([self.tsrc, self.tdst])
+        eid = np.concatenate(
+            [np.arange(t, dtype=np.int64), np.repeat(np.arange(t, dtype=np.int64), lens)]
+        )
+        order = np.argsort(pos, kind="stable")
+        self.ilist = eid[order]
+        iptr = np.zeros(num_cores + 1, dtype=np.int64)
+        np.add.at(iptr, pos + 1, 1)
+        self.iptr = np.cumsum(iptr)
+
+        self._placement: np.ndarray | None = None
+        self._sizes: np.ndarray | None = None
+        self._total = 0.0
+        # Last single-pair proposal scored by `swap_delta`: (a, b, edges,
+        # their re-measured sizes).  `apply_swaps` of that same pair
+        # reuses the measurement instead of paying the geometry twice —
+        # the propose-then-commit pattern of the scalar SA chain.
+        self._pending: tuple | None = None
+
+    # -- geometry ----------------------------------------------------------
+    def _tree_sizes(
+        self, edges: np.ndarray, src_core: np.ndarray, dst_core: np.ndarray,
+        inst: np.ndarray, n: int,
+    ) -> np.ndarray:
+        return multicast_tree_sizes(
+            src_core, dst_core, inst, self.mesh_w, self.mesh_h, n
+        )
+
+    def _sizes_of(self, edges: np.ndarray, placement: np.ndarray) -> np.ndarray:
+        """Tree-link count of each listed hyperedge under ``placement``."""
+        ent, inst = csr_gather(self.tptr, edges)
+        src_core = placement[self.tsrc[edges]][inst]
+        dst_core = placement[self.tdst[ent]]
+        return self._tree_sizes(edges, src_core, dst_core, inst, edges.shape[0])
+
+    # -- stateless ---------------------------------------------------------
+    def total(self, placement: np.ndarray) -> float:
+        edges = np.arange(self.num_hyperedges, dtype=np.int64)
+        return float((self.tw * self._sizes_of(edges, placement)).sum())
+
+    # -- engine-facing incremental API ------------------------------------
+    def attach(self, placement: np.ndarray) -> float:
+        edges = np.arange(self.num_hyperedges, dtype=np.int64)
+        self._placement = placement
+        self._sizes = self._sizes_of(edges, placement)
+        self._total = float((self.tw * self._sizes).sum())
+        self._pending = None
+        return self._total
+
+    def _incident(self, positions: np.ndarray) -> np.ndarray:
+        """Deduplicated hyperedges incident to any of ``positions``."""
+        ent, _ = csr_gather(self.iptr, positions)
+        return np.unique(self.ilist[ent])
+
+    def swap_delta(self, a: int, b: int) -> float:
+        e = self._incident(np.array([a, b], dtype=np.int64))
+        if e.shape[0] == 0:
+            self._pending = None
+            return 0.0
+        p2 = self._placement.copy()
+        p2[a], p2[b] = p2[b], p2[a]
+        new_sizes = self._sizes_of(e, p2)
+        self._pending = (int(a), int(b), e, new_sizes)
+        return float((self.tw[e] * (new_sizes - self._sizes[e])).sum())
+
+    def swap_delta_batch(self, aa: np.ndarray, bb: np.ndarray) -> np.ndarray:
+        """(B,) independent candidate deltas against the attached placement.
+
+        Re-measures only the hyperedges incident to each candidate's two
+        positions — all candidates expanded into one flat (candidate,
+        hyperedge, destination) replica list and measured by a single
+        `multicast_tree_sizes` call.
+        """
+        aa = np.asarray(aa, dtype=np.int64)
+        bb = np.asarray(bb, dtype=np.int64)
+        nb = aa.shape[0]
+        p = self._placement
+        ea, ca = csr_gather(self.iptr, aa)
+        eb, cb = csr_gather(self.iptr, bb)
+        cand = np.concatenate([ca, cb])
+        edges = self.ilist[np.concatenate([ea, eb])]
+        # One evaluation per distinct (candidate, hyperedge): a hyperedge
+        # incident to both swapped positions must not be counted twice.
+        ukey = np.unique(cand * np.int64(self.num_hyperedges) + edges)
+        if ukey.shape[0] == 0:
+            return np.zeros(nb, dtype=np.float64)
+        c, e = ukey // self.num_hyperedges, ukey % self.num_hyperedges
+        ent, inst = csr_gather(self.tptr, e)
+        # Each candidate's placement is the attached one with two entries
+        # exchanged; materializing all B small rows once turns the member
+        # core lookups into plain 2D gathers.
+        pmat = np.broadcast_to(p, (nb, p.shape[0])).copy()
+        rows = np.arange(nb)
+        pmat[rows, aa] = p[bb]
+        pmat[rows, bb] = p[aa]
+        src_core = pmat[c, self.tsrc[e]][inst]
+        dst_core = pmat[c[inst], self.tdst[ent]]
+        new_sizes = self._tree_sizes(e, src_core, dst_core, inst, e.shape[0])
+        deltas = np.zeros(nb, dtype=np.float64)
+        np.add.at(deltas, c, self.tw[e] * (new_sizes - self._sizes[e]))
+        return deltas
+
+    def apply_swaps(self, pairs: np.ndarray, total_delta: float | None = None) -> float:
+        """Commit position-disjoint swaps; re-measure incident trees once.
+
+        Exact: hyperedges not incident to any swapped position keep their
+        cached tree size, incident ones are re-measured under the final
+        placement, so the returned total is the true cost — no incremental
+        drift even though the batch was *scored* with per-candidate deltas.
+        Committing the single pair `swap_delta` just scored reuses its
+        measurement (``total_delta`` itself is ignored here: the size
+        cache must be refreshed regardless, and the pending measurement
+        already carries the delta).
+        """
+        pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+        if pairs.shape[0] == 0:
+            return self._total
+        p = self._placement
+        aa, bb = pairs[:, 0], pairs[:, 1]
+        pending = self._pending
+        self._pending = None
+        if (pairs.shape[0] == 1 and pending is not None
+                and pending[0] == int(aa[0]) and pending[1] == int(bb[0])):
+            _, _, touched, new_sizes = pending
+            p[aa], p[bb] = p[bb].copy(), p[aa].copy()
+        else:
+            p[aa], p[bb] = p[bb].copy(), p[aa].copy()
+            touched = self._incident(np.concatenate([aa, bb]))
+            new_sizes = (self._sizes_of(touched, p) if touched.shape[0]
+                         else self._sizes[touched])
+        if touched.shape[0]:
+            self._total += float(
+                (self.tw[touched] * (new_sizes - self._sizes[touched])).sum()
+            )
+            self._sizes[touched] = new_sizes
+        return self._total
+
+
+PLACE_OBJECTIVES = ("pairwise", "tree")
+
+
+def make_objective(
+    kind: str,
+    traffic: np.ndarray,
+    num_cores: int,
+    mesh_w: int,
+    mesh_h: int | None = None,
+    torus: bool = False,
+    hyper: Hypergraph | None = None,
+    part: np.ndarray | None = None,
+):
+    """Build a placement objective by name.
+
+    ``"pairwise"`` needs only the (k, k) traffic matrix; ``"tree"``
+    additionally needs the profiled multicast hypergraph and the partition
+    vector (to form destination-partition sets), and is mesh-only (XY
+    trees have no torus form).
+    """
+    if kind == "pairwise":
+        return PairwiseObjective(traffic, num_cores, mesh_w, torus=torus)
+    if kind == "tree":
+        if hyper is None or part is None:
+            raise ValueError("tree objective needs hyper= and part=")
+        if torus:
+            raise ValueError("tree objective is mesh-only (no torus XY trees)")
+        return TreeHopObjective(hyper, part, num_cores, mesh_w, mesh_h)
+    raise ValueError(f"unknown placement objective {kind!r}")
+
+
+def evaluate_placement(
+    placement: np.ndarray,
+    traffic: np.ndarray,
+    num_cores: int,
+    mesh_w: int,
+    trace_length: int,
+    mesh_h: int | None = None,
+    hyper: Hypergraph | None = None,
+    part: np.ndarray | None = None,
+    torus: bool = False,
+    reuse=None,
+) -> tuple[float, float | None]:
+    """Score a finished placement under both objectives: (avg_hop, tree_hop).
+
+    The one reporting path every toolchain method goes through (SA/tabu/PSO
+    searches, device mappers, and SCO's sequential placement alike), so
+    cross-method comparisons are never an artifact of who computed the
+    metric.  ``avg_hop`` is the paper's Eq. 2 average (pairwise hops per
+    packet of the run's traffic model); ``tree_hop`` is the multicast
+    tree-link traversals per packet under the same normalization, or None
+    when no hypergraph is available (or on torus meshes, which have no XY
+    trees).  ``reuse`` accepts an already-built objective instance (either
+    kind — e.g. the one that drove the search) so its construction cost is
+    not paid twice; scoring through it is stateless.
+    """
+    placement = np.asarray(placement, dtype=np.int64)
+    denom = max(trace_length, 1)
+    pw = (reuse if reuse is not None and reuse.name == "pairwise"
+          else PairwiseObjective(traffic, num_cores, mesh_w, torus=torus))
+    avg_hop = pw.total(placement) / denom
+    tree_hop = None
+    if reuse is not None and reuse.name == "tree":
+        tree_hop = reuse.total(placement) / denom
+    elif hyper is not None and part is not None and not torus:
+        tree = TreeHopObjective(hyper, part, num_cores, mesh_w, mesh_h)
+        tree_hop = tree.total(placement) / denom
+    return avg_hop, tree_hop

@@ -31,3 +31,24 @@ def swap_deltas(
     if backend == "interpret":
         return swap_deltas_pallas(sym, x, y, interpret=True)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+def swap_deltas_pairs(
+    sym: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    aa,
+    bb,
+    backend: str = "auto",
+):
+    """Deltas of B specific candidate pairs, via the all-pairs batch.
+
+    The batched mapping engine's device scoring path: one MXU launch
+    scores the entire O(K^2) neighborhood, from which the proposed
+    ``(aa[i], bb[i])`` candidates are gathered.  Cheaper than B separate
+    incremental deltas whenever B is a reasonable fraction of K^2 — the
+    crossover on real hardware is tracked with the `gain_eval`/`link_load`
+    thresholds (see ROADMAP).
+    """
+    full = swap_deltas(sym, x, y, backend=backend)
+    return full[jnp.asarray(aa), jnp.asarray(bb)]

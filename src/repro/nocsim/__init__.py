@@ -33,11 +33,12 @@ from .xy import (
     link_endpoints,
     link_ids_for_routes,
     multicast_tree_links,
+    multicast_tree_sizes,
     route_hops,
 )
 
 __all__ = [
     "EnergyModel", "NoCStats", "dedupe_firings", "simulate_noc",
     "link_count", "link_endpoints", "link_ids_for_routes",
-    "multicast_tree_links", "route_hops",
+    "multicast_tree_links", "multicast_tree_sizes", "route_hops",
 ]

@@ -21,6 +21,7 @@ __all__ = [
     "link_endpoints",
     "link_ids_for_routes",
     "multicast_tree_links",
+    "multicast_tree_sizes",
 ]
 
 
@@ -182,3 +183,88 @@ def multicast_tree_links(
     nl = link_count(w, h)
     key = np.unique(group[pkt].astype(np.int64) * nl + ids)
     return key % nl, key // nl
+
+
+def multicast_tree_sizes(
+    src: np.ndarray,
+    dst: np.ndarray,
+    group: np.ndarray,
+    w: int,
+    h: int,
+    num_groups: int,
+) -> np.ndarray:
+    """Distinct-link count of each group's XY multicast tree, in closed form.
+
+    ``sizes[g]`` is the number of directed links the tree of group ``g``
+    traverses — the per-firing flit-hop count of the tree-fork replay, and
+    the geometry the tree-hop placement objective
+    (`repro.core.placecost.TreeHopObjective`) scores candidate placements
+    with, so the mapper and the simulator share one accounting.  Group ids
+    must lie in ``[0, num_groups)``; groups may repeat a source core but a
+    group's entries must all share one source (as replicas of one firing
+    do).
+
+    Under XY routing every route of a group runs horizontally along the
+    source's row, then vertically along its destination's column, so the
+    union of the routes is: one horizontal segment on the source row
+    spanning the leftmost/rightmost destination columns, plus one vertical
+    segment per distinct destination column spanning that column's
+    farthest destinations above/below the source row.  Summing those span
+    lengths counts exactly ``len(multicast_tree_links(...))`` per group
+    (pinned by the engine tests) without expanding any route.
+    """
+    group = np.asarray(group, dtype=np.int64)
+    sizes = np.zeros(num_groups, dtype=np.int64)
+    if group.shape[0] == 0:
+        return sizes
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    dx = dst % w
+    dv = dst // w - src // w  # signed vertical offset from the source row
+    dh = dx - src % w  # signed horizontal offset from the source column
+    # Both reductions are per-segment (min, max) of a signed offset, so
+    # each rides on one plain sort of a shift-packed (segment, offset) key:
+    # the first entry of a segment is its min, the last its max.  Segments
+    # here average only a few entries, so sort + boundary picks beats
+    # ufunc.reduceat's per-segment dispatch by ~10x; shift packing keeps
+    # the unpack passes at mask/shift cost (int division is the slow part).
+    return (
+        sizes
+        + _packed_span(group * w + dx, dv, h, num_groups, scale=w)  # vertical
+        + _packed_span(group, dh, w, num_groups)  # horizontal, source row
+    )
+
+
+def _packed_span(seg: np.ndarray, off: np.ndarray, radius: int,
+                 num_groups: int, scale: int = 1) -> np.ndarray:
+    """Per-group sum over segments of (max(off, 0) - min(off, 0)).
+
+    ``off`` must lie in (-radius, radius); the group of segment ``s`` is
+    ``s // scale``.  One sort of ``(seg << bits) | (off + radius)`` orders
+    segments contiguously with offsets ascending inside, so each segment's
+    min/max are its boundary entries.  Sorts in int32 when the packed key
+    fits — ~2x faster for the sizes the mapping engine batches.
+    """
+    bits = int(2 * radius - 1).bit_length()
+    key = (seg << bits) | (off + radius)
+    top = (int(seg.max()) + 1) << bits
+    if top < np.iinfo(np.int32).max:
+        key = np.sort(key.astype(np.int32))
+    else:
+        key = np.sort(key)
+    kseg = key >> bits
+    m = key.shape[0]
+    last = np.empty(m, dtype=bool)
+    last[-1] = True
+    np.not_equal(kseg[1:], kseg[:-1], out=last[:-1])
+    first = np.empty(m, dtype=bool)
+    first[0] = True
+    first[1:] = last[:-1]
+    mask = (1 << bits) - 1
+    span = ((key[last] & mask) - radius).clip(min=0) \
+        - ((key[first] & mask) - radius).clip(max=0)
+    gid = kseg[last]
+    if scale != 1:
+        gid = gid // scale
+    return np.bincount(gid, weights=span,
+                       minlength=num_groups).astype(np.int64)
