@@ -18,11 +18,13 @@ def main() -> None:
                     help="paper-scale runs (all 5 SNNs, Table 1 spike counts)")
     ap.add_argument("--only", choices=["partition", "mapping",
                                        "mapping_engine", "overall",
-                                       "exec_time", "kernels", "nocsim"])
+                                       "exec_time", "kernels", "nocsim",
+                                       "faults"])
     args = ap.parse_args()
 
-    from . import (bench_exec_time, bench_kernels, bench_mapping_algos,
-                   bench_nocsim, bench_overall, bench_partition)
+    from . import (bench_exec_time, bench_faults, bench_kernels,
+                   bench_mapping_algos, bench_nocsim, bench_overall,
+                   bench_partition)
 
     suites = {
         "partition": bench_partition.run,
@@ -32,6 +34,7 @@ def main() -> None:
         "exec_time": bench_exec_time.run,
         "kernels": bench_kernels.run,
         "nocsim": bench_nocsim.run,
+        "faults": bench_faults.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -39,10 +39,18 @@ from .partition import PartitionResult, sneap_partition
 from .pipeline import ToolchainResult, run_toolchain
 from .placecost import (
     PLACE_OBJECTIVES,
+    MigrationAwareObjective,
     PairwiseObjective,
     TreeHopObjective,
     evaluate_placement,
     make_objective,
+)
+from .remap import (
+    RemapResult,
+    check_degraded_capacity,
+    evict_dead_partitions,
+    incremental_remap,
+    scratch_remap,
 )
 
 __all__ = [
@@ -54,7 +62,9 @@ __all__ = [
     "MAPPERS", "OBJECTIVE_AWARE_MAPPERS", "MappingResult",
     "pso_search", "sa_search", "tabu_search",
     "PLACE_OBJECTIVES", "PairwiseObjective", "TreeHopObjective",
-    "evaluate_placement", "make_objective",
+    "MigrationAwareObjective", "evaluate_placement", "make_objective",
+    "RemapResult", "check_degraded_capacity", "evict_dead_partitions",
+    "incremental_remap", "scratch_remap",
     "PartitionResult", "sneap_partition",
     "greedy_kl_partition", "sco_partition", "sco_place",
     "ToolchainResult", "run_toolchain",

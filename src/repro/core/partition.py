@@ -142,7 +142,12 @@ def sneap_partition(
         if max_k is not None:
             k = min(k, max_k)  # cannot exceed the mesh's core count
     if k < min_k:
-        raise ValueError(f"k={k} infeasible; need >= {min_k} cores of capacity {capacity}")
+        deficit = total - k * capacity
+        raise ValueError(
+            f"k={k} infeasible: {total} neurons exceed {k} cores x capacity "
+            f"{capacity} = {k * capacity} slots by {deficit}; need >= {min_k} "
+            f"cores (or {math.ceil(total / k)} capacity)"
+        )
     if coarsen_to is None:
         coarsen_to = max(4 * k, 128)
 

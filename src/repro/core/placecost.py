@@ -48,6 +48,7 @@ from .hopcost import hop_distance_matrix, swap_delta
 __all__ = [
     "PairwiseObjective",
     "TreeHopObjective",
+    "MigrationAwareObjective",
     "make_objective",
     "evaluate_placement",
     "PLACE_OBJECTIVES",
@@ -383,6 +384,113 @@ class TreeHopObjective:
             )
             self._sizes[touched] = new_sizes
         return self._total
+
+
+class MigrationAwareObjective:
+    """Wrap a placement objective with per-position migration pricing.
+
+    Used by the incremental re-mapper (`repro.core.remap`): the search
+    starts from the *live* placement and every candidate is charged, on
+    top of the base hop/tree-hop cost, for the neurons it would move:
+
+      penalty(M) = sum_j  move_cost[j] * [M(j) != live(j)]
+                 + forbid * sum_j [w_j > 0] * dead[M(j)]
+
+    where ``move_cost[j] = migration_cost * move_weight[j]`` (the neuron
+    count of partition j — virtual positions weigh zero, so parking them
+    anywhere is free) and the ``forbid`` term makes placing a *real*
+    partition on a failed core worse than any achievable hop gain while
+    staying finite, so swap deltas remain exactly the difference of
+    totals and the metamorphic delta tests hold on faulty meshes too.
+
+    The wrapper satisfies the same engine contract as the base objective
+    and shares the attached placement array with it (``attach`` binds the
+    identical object to both), so the base's committed swaps are visible
+    here without synchronization.  ``name`` is ``"mig+<base>"`` — never a
+    bare objective name, so reporting paths that special-case
+    ``"pairwise"``/``"tree"`` re-score through a clean objective instead
+    of leaking the penalty into avg_hop.
+    """
+
+    def __init__(
+        self,
+        base,
+        live_placement: np.ndarray,
+        move_weight: np.ndarray,
+        migration_cost: float,
+        dead_cores: np.ndarray | None = None,
+        forbid_penalty: float = 0.0,
+    ):
+        n = base.num_positions
+        live = np.asarray(live_placement, dtype=np.int64)
+        if live.shape[0] != n:
+            raise ValueError(
+                f"live placement covers {live.shape[0]} != {n} positions"
+            )
+        w = np.zeros(n, dtype=np.float64)
+        mw = np.asarray(move_weight, dtype=np.float64)
+        w[: mw.shape[0]] = mw
+        self.base = base
+        self.name = f"mig+{base.name}"
+        self.num_positions = n
+        self.num_partitions = base.num_partitions
+        self.live = live.copy()
+        self.move_cost = w * float(migration_cost)
+        self.real = w > 0
+        self.dead = (
+            np.zeros(n, dtype=bool) if dead_cores is None
+            else np.asarray(dead_cores, dtype=bool).copy()
+        )
+        self.forbid_penalty = float(forbid_penalty)
+        self._placement: np.ndarray | None = None
+        self._pen_total = 0.0
+
+    # -- penalty geometry --------------------------------------------------
+    def _pen(self, pos: np.ndarray, core: np.ndarray) -> np.ndarray:
+        """Penalty of placing partition(s) ``pos`` on core(s) ``core``."""
+        moved = self.move_cost[pos] * (core != self.live[pos])
+        forbid = self.forbid_penalty * (self.real[pos] & self.dead[core])
+        return moved + forbid
+
+    def penalty_total(self, placement: np.ndarray) -> float:
+        pos = np.arange(placement.shape[0], dtype=np.int64)
+        return float(self._pen(pos, placement).sum())
+
+    # -- stateless ---------------------------------------------------------
+    def total(self, placement: np.ndarray) -> float:
+        return self.base.total(placement) + self.penalty_total(placement)
+
+    # -- engine-facing incremental API ------------------------------------
+    def attach(self, placement: np.ndarray) -> float:
+        base_total = self.base.attach(placement)
+        self._placement = self.base._placement
+        self._pen_total = self.penalty_total(self._placement)
+        return base_total + self._pen_total
+
+    def _swap_pen_delta(self, aa: np.ndarray, bb: np.ndarray) -> np.ndarray:
+        p = self._placement
+        return (
+            self._pen(aa, p[bb]) + self._pen(bb, p[aa])
+            - self._pen(aa, p[aa]) - self._pen(bb, p[bb])
+        )
+
+    def swap_delta(self, a: int, b: int) -> float:
+        aa = np.array([a], dtype=np.int64)
+        bb = np.array([b], dtype=np.int64)
+        return self.base.swap_delta(a, b) + float(self._swap_pen_delta(aa, bb)[0])
+
+    def swap_delta_batch(self, aa: np.ndarray, bb: np.ndarray) -> np.ndarray:
+        aa = np.asarray(aa, dtype=np.int64)
+        bb = np.asarray(bb, dtype=np.int64)
+        return self.base.swap_delta_batch(aa, bb) + self._swap_pen_delta(aa, bb)
+
+    def apply_swaps(self, pairs: np.ndarray, total_delta: float | None = None) -> float:
+        # The engine's total_delta includes the penalty part, which the
+        # base must not fold into its hop total — commit through the base
+        # with its own exact accounting and refresh the O(K) penalty.
+        base_total = self.base.apply_swaps(pairs)
+        self._pen_total = self.penalty_total(self._placement)
+        return base_total + self._pen_total
 
 
 PLACE_OBJECTIVES = ("pairwise", "tree")

@@ -256,8 +256,15 @@ def refine_level_vec(
     plateau_eps: float = _PLATEAU_EPS,
     plateau_cooldown: int = _PLATEAU_COOLDOWN,
     stats: dict | None = None,
+    forbid: np.ndarray | None = None,
 ) -> tuple[np.ndarray, int]:
     """Refine ``part`` by batched moves; returns (part, score).
+
+    ``forbid`` is an optional (k,) boolean mask of partitions that may not
+    *receive* movers (their effective capacity is zero); vertices already
+    inside one are still free to leave.  The degraded re-mapper uses it to
+    keep the post-eviction refine from repopulating partitions whose cores
+    failed.
 
     ``score`` is the edge cut or communication volume per ``objective``.
     Positive-gain batches run to a fixed point; then up to
@@ -285,6 +292,9 @@ def refine_level_vec(
     n = graph.num_vertices
     adjncy, adjwgt, vwgt = graph.adjncy, graph.adjwgt, graph.vwgt
     pweight = partition_weights(graph, part, k)
+    cap = np.full(k, capacity, dtype=np.int64)
+    if forbid is not None:
+        cap[np.asarray(forbid, dtype=bool)] = 0
     cut = edge_cut(graph, part) if objective == "cut" else comm_volume(hyper, part)
     if graph.adjncy.shape[0] == 0:
         return part, cut
@@ -572,7 +582,7 @@ def refine_level_vec(
         own = part[rows_v]
         rows = np.arange(rows_v.shape[0])
         internal = deg[rows, own]  # advanced indexing: already a copy
-        m = np.where(pweight[None, :] + vwgt[rows_v][:, None] <= capacity,
+        m = np.where(pweight[None, :] + vwgt[rows_v][:, None] <= cap[None, :],
                      deg, -np.inf)
         m[rows, own] = -np.inf
         t = np.argmax(m, axis=1)
@@ -602,7 +612,7 @@ def refine_level_vec(
         # rows themselves only change when a co-member moves, so with the
         # row cache retargeting is a pure masked argmax — no re-gather;
         # without it the rows re-enter the active set for re-evaluation.
-        stale = np.isfinite(gain_full) & (pweight[target_full] + vwgt > capacity)
+        stale = np.isfinite(gain_full) & (pweight[target_full] + vwgt > cap[target_full])
         srows = np.nonzero(stale)[0]
         if srows.shape[0]:
             if use_deg_cache:
@@ -657,7 +667,7 @@ def refine_level_vec(
         mg = gain_full[movers]
         order = np.lexsort((movers, -mg, mt))
         movers, mt, mg = movers[order], mt[order], mg[order]
-        admit = grouped_admission(mt, vwgt[movers], capacity - pweight)
+        admit = grouped_admission(mt, vwgt[movers], cap - pweight)
         moved, dest, moved_gain = movers[admit], mt[admit], mg[admit]
         if moved.shape[0] == 0:
             # Unreachable: the stale-target filter above guarantees every

@@ -28,6 +28,7 @@ diffs and as the replica-based multicast baseline.
 """
 from .energy import EnergyModel
 from .sim import NoCStats, dedupe_firings, simulate_noc
+from .stats import combine_stats
 from .xy import (
     link_count,
     link_endpoints,
@@ -35,10 +36,12 @@ from .xy import (
     multicast_tree_links,
     multicast_tree_sizes,
     route_hops,
+    routes_blocked,
 )
 
 __all__ = [
-    "EnergyModel", "NoCStats", "dedupe_firings", "simulate_noc",
-    "link_count", "link_endpoints", "link_ids_for_routes",
+    "EnergyModel", "NoCStats", "combine_stats", "dedupe_firings",
+    "simulate_noc", "link_count", "link_endpoints", "link_ids_for_routes",
     "multicast_tree_links", "multicast_tree_sizes", "route_hops",
+    "routes_blocked",
 ]

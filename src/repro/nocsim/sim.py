@@ -52,6 +52,7 @@ from .xy import (
     multicast_tree_links,
     next_link,
     route_hops,
+    routes_blocked,
 )
 
 __all__ = ["NoCStats", "dedupe_firings", "simulate_noc"]
@@ -67,12 +68,14 @@ def _analytic(
     energy: EnergyModel = EnergyModel(),
     group: np.ndarray | None = None,
     chunk_links: int = 20_000_000,
+    route_order: np.ndarray | None = None,
 ) -> NoCStats:
     nl = link_count(w, h)
     local = src_core == dst_core
     n_local = int(local.sum())
     t, s, d = trace_t[~local], src_core[~local], dst_core[~local]
     g = group[~local] if group is not None else None
+    o = route_order[~local] if route_order is not None else None
     hops = route_hops(s, d, w)
     total_hops = int(hops.sum())
 
@@ -83,6 +86,8 @@ def _analytic(
     t, s, d = t[order], s[order], d[order]
     if g is not None:
         g = g[order]
+    if o is not None:
+        o = o[order]
     bounds = np.flatnonzero(np.diff(t)) + 1
     windows = np.split(np.arange(t.shape[0]), bounds)
     batch: list[np.ndarray] = []
@@ -92,10 +97,12 @@ def _analytic(
         nonlocal per_link
         cong = 0
         for widx in idxs:
+            ow = o[widx] if o is not None else None
             if g is None:
-                ids, _ = link_ids_for_routes(s[widx], d[widx], w, h)
+                ids, _ = link_ids_for_routes(s[widx], d[widx], w, h, order=ow)
             else:
-                ids, _ = multicast_tree_links(s[widx], d[widx], g[widx], w, h)
+                ids, _ = multicast_tree_links(s[widx], d[widx], g[widx], w, h,
+                                              order=ow)
             loads = np.bincount(ids, minlength=nl)
             per_link += loads
             cong += int(np.maximum(loads - link_capacity, 0).sum())
@@ -139,22 +146,27 @@ def _queued_ref(
     energy: EnergyModel,
     group: np.ndarray | None = None,
     max_cycles_per_window: int = 100_000,
+    route_order: np.ndarray | None = None,
 ) -> NoCStats:
     """Scalar reference engine: Python loop per window, lexsorts per cycle.
 
     Kept verbatim as the parity oracle for the batched replay
     (`repro.nocsim.replay`) and as the replica-based multicast upper bound
-    the tree-fork engine is measured against.
+    the tree-fork engine is measured against.  ``route_order`` flags
+    records routed YX (fault-escape detours); ``None`` is pure XY.
     """
     nl = link_count(w, h)
     local = src_core == dst_core
     n_local = int(local.sum())
     t, s, d = trace_t[~local], src_core[~local], dst_core[~local]
     g = group[~local] if group is not None else None
+    o = route_order[~local] if route_order is not None else None
     order = np.argsort(t, kind="stable")
     t, s, d = t[order], s[order], d[order]
     if g is not None:
         g = g[order]
+    if o is not None:
+        o = o[order]
 
     per_link = np.zeros(nl, dtype=np.int64)
     tree_per_link = np.zeros(nl, dtype=np.int64) if g is not None else None
@@ -168,11 +180,12 @@ def _queued_ref(
         if widx.shape[0] == 0:
             continue
         ws, wd = s[widx], d[widx]
+        wo = o[widx] if o is not None else None
         if g is not None:
             # Static tree accounting, chunked per window like the analytic
             # path (firing ids never span windows, so per-window dedup is
             # exact and the route expansion stays bounded).
-            tids, _ = multicast_tree_links(ws, wd, g[widx], w, h)
+            tids, _ = multicast_tree_links(ws, wd, g[widx], w, h, order=wo)
             tree_per_link += np.bincount(tids, minlength=nl)
         n = ws.shape[0]
         # Crossbar egress limit: the r-th spike from a core this step
@@ -195,7 +208,8 @@ def _queued_ref(
             active = (~arrived) & (inject_cycle <= cycle)
             idx = np.flatnonzero(active)
             if idx.shape[0]:
-                nxt, link = next_link(cur[idx], wd[idx], w, h)
+                nxt, link = next_link(cur[idx], wd[idx], w, h,
+                                      yx=wo[idx] if wo is not None else None)
                 # Per-link arbitration: oldest (earliest inject, stable) first.
                 key = np.lexsort((inject_cycle[idx], link))
                 sl = link[key]
@@ -256,6 +270,7 @@ def simulate_noc(
     stepper: str = "numpy",
     screen: str = "numpy",
     max_cycles_per_window: int = 100_000,
+    faults=None,
 ) -> NoCStats:
     """Replay a spike trace through the mapped NoC.
 
@@ -277,6 +292,17 @@ def simulate_noc(
         ``kernels/link_load`` machinery) — backend for the batched
         engine's whole-window contention screen.  The choice never changes
         results, only where the screening work runs.
+      faults: optional `repro.runtime.faults.FaultState` of dead cores and
+        links.  Packets with a dead endpoint are dropped; packets whose XY
+        route crosses a dead link/core detour via the YX escape order when
+        that route is clean, and are dropped otherwise.  Drops and detours
+        are reported in ``NoCStats.spikes_dropped`` / ``detour_hops``
+        (detour hops count the escape routes' per-packet route hops; both
+        orders are minimal, so a detour changes *which* links are crossed,
+        not how many).  ``None`` — or a state with no failures — is
+        bit-identical to the fault-free engines.  Fault-aware replay is
+        host-only: it requires the default ``stepper="numpy"`` and
+        ``screen="numpy"`` backends.
     """
     if mode not in ("queued", "analytic"):
         raise ValueError(f"unknown mode {mode!r}")
@@ -286,6 +312,18 @@ def simulate_noc(
         raise ValueError(f"unknown stepper {stepper!r}")
     if screen not in ("numpy", "linkload", "pallas", "interpret", "jnp"):
         raise ValueError(f"unknown screen {screen!r}")
+    fault_on = faults is not None and faults.any()
+    if fault_on:
+        if (faults.w, faults.h) != (mesh_w, mesh_h):
+            raise ValueError(
+                f"fault state built for {faults.w}x{faults.h}, "
+                f"mesh is {mesh_w}x{mesh_h}")
+        if stepper != "numpy":
+            raise ValueError("fault-aware replay requires stepper='numpy'")
+        if screen != "numpy":
+            raise ValueError("fault-aware replay requires screen='numpy'")
+        dead = faults.dead_cores
+        blocked = faults.blocked_links()
     core_of_neuron = placement[part]
     src_core = core_of_neuron[trace_src]
     dst_core = core_of_neuron[trace_dst]
@@ -307,6 +345,30 @@ def simulate_noc(
     dst_core = dst_core[order]
     local = src_core == dst_core
     n_local = int(local.sum())
+    keep_local = local
+    dropped = 0
+    detour_hops = 0
+    if fault_on:
+        # A core-local delivery on a dead core is lost with the core.
+        keep_local = local & ~dead[src_core]
+        dropped += n_local - int(keep_local.sum())
+        n_local = int(keep_local.sum())
+
+    def _fates(s: np.ndarray, d: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(deliver, detour) per remote packet under the fault masks:
+        dead endpoint -> drop; XY route clean -> direct; else YX escape
+        route clean -> detour; else drop."""
+        ep_dead = dead[s] | dead[d]
+        xy_bad = routes_blocked(s, d, mesh_w, mesh_h, blocked)
+        yx_ok = ~routes_blocked(s, d, mesh_w, mesh_h, blocked,
+                                order=np.ones(s.shape[0], dtype=bool))
+        deliver = ~ep_dead & (~xy_bad | yx_ok)
+        return deliver, deliver & xy_bad
+
+    def _with_faults(stats: NoCStats) -> NoCStats:
+        stats.spikes_dropped = dropped
+        stats.detour_hops = detour_hops
+        return stats
 
     if cast == "multicast":
         # Only NoC-bound transmissions deduplicate into packets: a
@@ -317,35 +379,72 @@ def simulate_noc(
             int(part.shape[0]), mesh_w * mesh_h,
         )
         rsrc_core = core_of_neuron[rsrc]
+        route_order = None
+        if fault_on:
+            deliver, yx = _fates(rsrc_core, rdst)
+            dropped += int((~deliver).sum())
+            detour_hops = int(route_hops(rsrc_core[yx], rdst[yx], mesh_w).sum())
+            rt, rsrc_core, rdst = rt[deliver], rsrc_core[deliver], rdst[deliver]
+            route_order = yx[deliver]
+            # Escape copies fork their own tree: splitting each firing into
+            # an XY and a YX subgroup keeps every group's route union a
+            # tree entered at most once per node — the invariant both the
+            # tree-fork engine and the static tree accounting rely on.
+            firing = firing[deliver] * 2 + route_order.astype(np.int64)
         if mode == "analytic" or engine == "ref":
             # Replica-record layout (locals first; they are filtered on a
             # src_core == dst_core test inside, so any group label works).
-            trace_t = np.concatenate([trace_t[local], rt])
-            src_core = np.concatenate([src_core[local], rsrc_core])
-            dst_core = np.concatenate([dst_core[local], rdst])
+            trace_t = np.concatenate([trace_t[keep_local], rt])
+            src_core = np.concatenate([src_core[keep_local], rsrc_core])
+            dst_core = np.concatenate([dst_core[keep_local], rdst])
             group = np.concatenate([np.full(n_local, -1, dtype=np.int64),
                                     firing])
+            order_cat = None
+            if route_order is not None:
+                order_cat = np.concatenate(
+                    [np.zeros(n_local, dtype=bool), route_order])
         if mode == "analytic":
-            return _analytic(trace_t, src_core, dst_core, mesh_w, mesh_h,
-                             link_capacity, energy, group)
+            return _with_faults(_analytic(
+                trace_t, src_core, dst_core, mesh_w, mesh_h,
+                link_capacity, energy, group, route_order=order_cat))
         if engine == "ref":
-            return _queued_ref(trace_t, src_core, dst_core, mesh_w, mesh_h,
-                               link_capacity, inject_capacity, energy, group,
-                               max_cycles_per_window)
-        return queued_multicast_tree(
+            return _with_faults(_queued_ref(
+                trace_t, src_core, dst_core, mesh_w, mesh_h,
+                link_capacity, inject_capacity, energy, group,
+                max_cycles_per_window, route_order=order_cat))
+        return _with_faults(queued_multicast_tree(
             rt, rsrc_core, rdst, firing, mesh_w, mesh_h, link_capacity,
             inject_capacity, energy, n_local, max_cycles_per_window,
-            screen=screen)
+            screen=screen, order=route_order))
     if cast != "unicast":
         raise ValueError(f"unknown cast {cast!r}")
+    route_order = None
+    if fault_on:
+        rt2 = trace_t[~local]
+        rs, rd = src_core[~local], dst_core[~local]
+        deliver, yx = _fates(rs, rd)
+        dropped += int((~deliver).sum())
+        detour_hops = int(route_hops(rs[yx], rd[yx], mesh_w).sum())
+        route_order = yx[deliver]
+        trace_t = np.concatenate([trace_t[keep_local], rt2[deliver]])
+        src_core = np.concatenate([src_core[keep_local], rs[deliver]])
+        dst_core = np.concatenate([dst_core[keep_local], rd[deliver]])
+        order_cat = np.concatenate([np.zeros(n_local, dtype=bool),
+                                    route_order])
+        local = src_core == dst_core
+    else:
+        order_cat = None
     if mode == "analytic":
-        return _analytic(trace_t, src_core, dst_core, mesh_w, mesh_h,
-                         link_capacity, energy)
+        return _with_faults(_analytic(
+            trace_t, src_core, dst_core, mesh_w, mesh_h,
+            link_capacity, energy, route_order=order_cat))
     if engine == "ref":
-        return _queued_ref(trace_t, src_core, dst_core, mesh_w, mesh_h,
-                           link_capacity, inject_capacity, energy, None,
-                           max_cycles_per_window)
-    return queued_unicast(
+        return _with_faults(_queued_ref(
+            trace_t, src_core, dst_core, mesh_w, mesh_h,
+            link_capacity, inject_capacity, energy, None,
+            max_cycles_per_window, route_order=order_cat))
+    return _with_faults(queued_unicast(
         trace_t[~local], src_core[~local], dst_core[~local], mesh_w, mesh_h,
         link_capacity, inject_capacity, energy, n_local,
-        max_cycles_per_window, stepper=stepper, screen=screen)
+        max_cycles_per_window, stepper=stepper, screen=screen,
+        order=route_order))

@@ -9,6 +9,13 @@ Directed link id layout (total ``link_count(W, H)`` links):
 XY routing resolves X first, then Y — deadlock-free and static, which is
 what makes the paper's analytic hop evaluation (and this module's fully
 vectorized route expansion) possible.
+
+The route expanders also accept a per-packet ``order`` flag selecting YX
+(Y first, then X) instead: the fault-escape routes of the degradation
+model (`repro.runtime.faults`) are dimension-ordered too, just along the
+other axis, so every structural fact the engines rely on — static routes,
+at most two consecutive link-id runs, minimal hop count — holds for both
+orders and the same expansion code serves faulty and fault-free meshes.
 """
 from __future__ import annotations
 
@@ -22,6 +29,7 @@ __all__ = [
     "link_ids_for_routes",
     "multicast_tree_links",
     "multicast_tree_sizes",
+    "routes_blocked",
 ]
 
 
@@ -35,10 +43,15 @@ def route_hops(src: np.ndarray, dst: np.ndarray, w: int) -> np.ndarray:
     return np.abs(sx - dx) + np.abs(sy - dy)
 
 
-def next_link(cur: np.ndarray, dst: np.ndarray, w: int, h: int) -> tuple[np.ndarray, np.ndarray]:
-    """Vectorized single XY step: returns (next_core, link_id).
+def next_link(
+    cur: np.ndarray, dst: np.ndarray, w: int, h: int,
+    yx: np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized single dimension-ordered step: returns (next_core, link_id).
 
-    Entries with cur == dst return (cur, -1).
+    Entries with cur == dst return (cur, -1).  ``yx`` flags packets that
+    route Y-first (the fault-escape order); ``None`` keeps the pure XY
+    behaviour bit-for-bit.
     """
     cx, cy = cur % w, cur // w
     dx, dy = dst % w, dst // w
@@ -47,10 +60,19 @@ def next_link(cur: np.ndarray, dst: np.ndarray, w: int, h: int) -> tuple[np.ndar
     s_base = 2 * (w - 1) * h
     n_base = s_base + w * (h - 1)
 
-    go_e = cx < dx
-    go_w = cx > dx
-    go_s = (cx == dx) & (cy < dy)
-    go_n = (cx == dx) & (cy > dy)
+    if yx is None:
+        go_e = cx < dx
+        go_w = cx > dx
+        go_s = (cx == dx) & (cy < dy)
+        go_n = (cx == dx) & (cy > dy)
+    else:
+        yx = np.asarray(yx, dtype=bool)
+        h_turn = ~yx | (cy == dy)  # X moves: first leg of XY, last of YX
+        v_turn = yx | (cx == dx)  # Y moves: first leg of YX, last of XY
+        go_e = (cx < dx) & h_turn
+        go_w = (cx > dx) & h_turn
+        go_s = (cy < dy) & v_turn
+        go_n = (cy > dy) & v_turn
 
     nxt = cur.copy()
     link = np.full(cur.shape, -1, dtype=np.int64)
@@ -101,7 +123,8 @@ def link_endpoints(ids: np.ndarray, w: int, h: int) -> tuple[np.ndarray, np.ndar
 
 
 def link_ids_for_routes(
-    src: np.ndarray, dst: np.ndarray, w: int, h: int, with_steps: bool = False
+    src: np.ndarray, dst: np.ndarray, w: int, h: int, with_steps: bool = False,
+    order: np.ndarray | None = None,
 ) -> tuple[np.ndarray, ...]:
     """Expand each (src, dst) pair's full XY route into directed link ids.
 
@@ -110,8 +133,13 @@ def link_ids_for_routes(
     traversal along its packet's route (the cycle offset at which an
     unobstructed packet crosses that link), which is what the batched
     replay's contention screen schedules against.  Exploits the fact that
-    an XY route is at most two *consecutive* runs of link ids under the
-    layout above.
+    a dimension-ordered route is at most two *consecutive* runs of link
+    ids under the layout above.
+
+    ``order`` flags packets routed YX instead of XY (the fault-escape
+    order): the vertical run moves to the source column, the horizontal
+    run to the destination row, and the step offsets compose Y-leg-first.
+    ``None`` is the pure XY expansion, byte-identical to before.
     """
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
@@ -121,21 +149,29 @@ def link_ids_for_routes(
     s_base = 2 * (w - 1) * h
     n_base = s_base + w * (h - 1)
 
-    # Horizontal run (at row sy).
+    if order is None:
+        h_row, v_col = sy, dx  # XY: horizontal on source row, vertical on dest column
+        yx = None
+    else:
+        yx = np.asarray(order, dtype=bool)
+        h_row = np.where(yx, dy, sy)
+        v_col = np.where(yx, sx, dx)
+
+    # Horizontal run (at row h_row).
     east = dx > sx
     west = dx < sx
     h_len = np.abs(dx - sx)
     h_start = np.where(
-        east, sy * (w - 1) + sx,  # E ids x = sx .. dx-1
-        np.where(west, w_base + sy * (w - 1) + dx, 0),  # W ids (x-1) = dx .. sx-1
+        east, h_row * (w - 1) + sx,  # E ids x = sx .. dx-1
+        np.where(west, w_base + h_row * (w - 1) + dx, 0),  # W ids (x-1) = dx .. sx-1
     )
-    # Vertical run (at column dx).
+    # Vertical run (at column v_col).
     south = dy > sy
     north = dy < sy
     v_len = np.abs(dy - sy)
     v_start = np.where(
-        south, s_base + dx * (h - 1) + sy,  # S ids y = sy .. dy-1
-        np.where(north, n_base + dx * (h - 1) + dy, 0),  # N ids (y-1) = dy .. sy-1
+        south, s_base + v_col * (h - 1) + sy,  # S ids y = sy .. dy-1
+        np.where(north, n_base + v_col * (h - 1) + dy, 0),  # N ids (y-1) = dy .. sy-1
     )
 
     def expand(starts, lens):
@@ -155,11 +191,16 @@ def link_ids_for_routes(
     if not with_steps:
         return ids, pkt
     # Id runs ascend eastward/southward but a westbound (northbound) packet
-    # crosses its run's ids in descending order — flip `within` there.  The
-    # vertical run follows the whole horizontal run (XY order).
+    # crosses its run's ids in descending order — flip `within` there.
+    # Under XY the vertical run follows the whole horizontal run; under YX
+    # the horizontal run follows the whole vertical run.
     h_step = np.where(west[h_pkt], h_len[h_pkt] - 1 - h_within, h_within)
-    v_step = h_len[v_pkt] + np.where(north[v_pkt], v_len[v_pkt] - 1 - v_within,
-                                     v_within)
+    v_step = np.where(north[v_pkt], v_len[v_pkt] - 1 - v_within, v_within)
+    if yx is None:
+        v_step = v_step + h_len[v_pkt]
+    else:
+        h_step = h_step + np.where(yx[h_pkt], v_len[h_pkt], 0)
+        v_step = v_step + np.where(yx[v_pkt], 0, h_len[v_pkt])
     return ids, pkt, np.concatenate([h_step, v_step])
 
 
@@ -169,6 +210,7 @@ def multicast_tree_links(
     group: np.ndarray,
     w: int,
     h: int,
+    order: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Directed link ids traversed by each group's XY multicast tree.
 
@@ -178,11 +220,39 @@ def multicast_tree_links(
     multicast tree — a branch link is traversed *once* per firing no
     matter how many destinations lie beyond it.  Returns (link_ids,
     group_ids), one entry per distinct (group, link) traversal.
+
+    ``order`` routes flagged packets YX (fault escape).  A group must be
+    order-pure (all XY or all YX) for the union to stay a tree entered at
+    most once per node — the fault layer splits mixed firings into one
+    subgroup per order before calling this.
     """
-    ids, pkt = link_ids_for_routes(src, dst, w, h)
+    ids, pkt = link_ids_for_routes(src, dst, w, h, order=order)
     nl = link_count(w, h)
     key = np.unique(group[pkt].astype(np.int64) * nl + ids)
     return key % nl, key // nl
+
+
+def routes_blocked(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: int,
+    h: int,
+    blocked: np.ndarray,
+    order: np.ndarray | None = None,
+) -> np.ndarray:
+    """Per-packet flag: does the dimension-ordered route cross a blocked link?
+
+    ``blocked`` is an (nl,) boolean mask of unusable links (dead links plus
+    every link touching a dead core — see `FaultState.blocked_links`).
+    Zero-hop routes (src == dst) are never blocked by links.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    out = np.zeros(src.shape[0], dtype=bool)
+    ids, pkt = link_ids_for_routes(src, dst, w, h, order=order)
+    hit = blocked[ids]
+    if hit.any():
+        out[pkt[hit]] = True
+    return out
 
 
 def multicast_tree_sizes(

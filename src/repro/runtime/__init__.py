@@ -1,5 +1,9 @@
 from .checkpoint import CheckpointManager
 from .elastic import remesh_params
+from .faults import FaultEvent, FaultSchedule, FaultState, heartbeat_detect
 from .health import HeartbeatMonitor
 
-__all__ = ["CheckpointManager", "remesh_params", "HeartbeatMonitor"]
+__all__ = [
+    "CheckpointManager", "remesh_params", "HeartbeatMonitor",
+    "FaultEvent", "FaultSchedule", "FaultState", "heartbeat_detect",
+]

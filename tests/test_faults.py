@@ -1,0 +1,406 @@
+"""Metamorphic tests for fault injection + incremental re-mapping.
+
+The graceful-degradation layer (PR 6) spans three modules and this suite
+pins its load-bearing invariants:
+
+* `repro.runtime.faults` / `repro.nocsim` — an *empty* fault state is
+  bit-identical to the fault-free engines on every `NoCStats` field; dead
+  endpoints drop, blocked XY routes detour via YX when clean, and spikes
+  are conserved (delivered + local + dropped == transmissions).
+* `repro.core.placecost.MigrationAwareObjective` — batched swap deltas
+  are *exact* differences of totals even with migration prices and dead
+  cores in play (the property the SA engine's correctness rides on).
+* `repro.core.remap` — eviction vacates exactly the requested partitions
+  and never repopulates them through the forbidden refine pass; both
+  remap strategies are deterministic under a fixed seed and never leave a
+  populated partition on a dead core; infeasible degraded meshes fail
+  with an error naming the exact deficit.
+* `repro.core.pipeline.run_toolchain(fault_schedule=...)` — a zero-event
+  schedule reproduces the fault-free replay bit for bit, and a mid-trace
+  core failure surfaces remap bookkeeping in ``summary()``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import fanout_snn_graph, random_spike_trace
+
+from repro.core import (
+    MigrationAwareObjective,
+    check_degraded_capacity,
+    evict_dead_partitions,
+    incremental_remap,
+    make_objective,
+    partition_weights,
+    run_toolchain,
+    scratch_remap,
+    sneap_partition,
+)
+from repro.nocsim import simulate_noc
+from repro.nocsim.xy import link_ids_for_routes
+from repro.runtime.faults import (
+    FaultEvent,
+    FaultSchedule,
+    FaultState,
+    heartbeat_detect,
+)
+from repro.runtime.health import HeartbeatMonitor
+from repro.snn.simulate import ProfileResult
+
+
+def assert_stats_identical(a, b):
+    da, db = dataclasses.asdict(a), dataclasses.asdict(b)
+    assert da.keys() == db.keys()
+    for key in da:
+        va, vb = da[key], db[key]
+        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+            assert np.array_equal(va, vb), key
+        else:
+            assert va == vb, key
+
+
+# ---------------------------------------------------------------------------
+# fault model: zero-fault parity, drops, detours, conservation
+
+
+@pytest.mark.parametrize("cast", ["unicast", "multicast"])
+@pytest.mark.parametrize("mode,engine", [
+    ("analytic", "batched"), ("queued", "batched"), ("queued", "ref"),
+])
+def test_empty_fault_state_bit_identical(cast, mode, engine):
+    t, src, dst, part, placement = random_spike_trace(
+        seed=2, n_spikes=600, timesteps=15)
+    args = dict(mode=mode, engine=engine, cast=cast, link_capacity=2)
+    plain = simulate_noc(t, src, dst, part, placement, 3, 3, **args)
+    empty = simulate_noc(t, src, dst, part, placement, 3, 3,
+                         faults=FaultState.none(3, 3), **args)
+    assert_stats_identical(plain, empty)
+    assert empty.spikes_dropped == 0 and empty.detour_hops == 0
+
+
+@pytest.mark.parametrize("mode,engine", [
+    ("analytic", "batched"), ("queued", "batched"), ("queued", "ref"),
+])
+def test_unicast_spike_conservation_under_dead_cores(mode, engine):
+    t, src, dst, part, placement = random_spike_trace(
+        seed=5, n_spikes=800, timesteps=10)
+    state = FaultState.none(3, 3)
+    state = state.apply(FaultEvent(0, "core", (1, 7)))
+    s = simulate_noc(t, src, dst, part, placement, 3, 3, mode=mode,
+                     engine=engine, link_capacity=2, faults=state)
+    assert s.spikes_dropped > 0
+    # every transmission is delivered remotely, delivered locally, or dropped
+    assert s.num_noc_spikes + s.num_local_spikes + s.spikes_dropped == t.shape[0]
+    base = simulate_noc(t, src, dst, part, placement, 3, 3, mode=mode,
+                        engine=engine, link_capacity=2)
+    assert base.num_noc_spikes + base.num_local_spikes == t.shape[0]
+    assert s.num_noc_spikes < base.num_noc_spikes
+
+
+def _one_packet(src_core, dst_core):
+    """A single spike between two 2-neuron partitions on a 3x3 mesh."""
+    t = np.array([0])
+    src, dst = np.array([0]), np.array([1])
+    part = np.array([0, 1])
+    placement = np.array([src_core, dst_core])
+    return t, src, dst, part, placement
+
+
+def test_blocked_xy_route_detours_via_yx():
+    # core 0 -> core 4 on 3x3: XY goes east (0->1) then north (1->4);
+    # YX goes north (0->3) then east (3->4).
+    t, src, dst, part, placement = _one_packet(0, 4)
+    east01 = int(link_ids_for_routes(np.array([0]), np.array([1]), 3, 3)[0][0])
+    north03 = int(link_ids_for_routes(np.array([0]), np.array([3]), 3, 3)[0][0])
+    state = FaultState.none(3, 3).apply(FaultEvent(0, "link", (east01,)))
+    s = simulate_noc(t, src, dst, part, placement, 3, 3, faults=state)
+    assert s.spikes_dropped == 0
+    assert s.num_noc_spikes == 1
+    assert s.detour_hops == 2  # both orders are minimal: same hop count
+    assert s.total_hops == 2
+    # both dimension orders blocked -> the packet is dropped
+    both = state.apply(FaultEvent(0, "link", (north03,)))
+    s2 = simulate_noc(t, src, dst, part, placement, 3, 3, faults=both)
+    assert s2.spikes_dropped == 1
+    assert s2.num_noc_spikes == 0 and s2.detour_hops == 0
+
+
+def test_dead_endpoint_drops_remote_and_local_spikes():
+    t, src, dst, part, placement = _one_packet(0, 4)
+    dead_dst = FaultState.none(3, 3).apply(FaultEvent(0, "core", (4,)))
+    s = simulate_noc(t, src, dst, part, placement, 3, 3, faults=dead_dst)
+    assert s.spikes_dropped == 1 and s.num_noc_spikes == 0
+    # a core-local delivery dies with its core
+    local = simulate_noc(t, src, np.array([0]), part, placement, 3, 3,
+                         faults=FaultState.none(3, 3).apply(
+                             FaultEvent(0, "core", (0,))))
+    assert local.spikes_dropped == 1 and local.num_local_spikes == 0
+
+
+def test_dead_core_kills_its_router_for_through_traffic():
+    # core 0 -> core 2 (same row): XY and YX both run straight through
+    # core 1's router; killing core 1 strands the packet.
+    t, src, dst, part, placement = _one_packet(0, 2)
+    state = FaultState.none(3, 3).apply(FaultEvent(0, "core", (1,)))
+    s = simulate_noc(t, src, dst, part, placement, 3, 3, faults=state)
+    assert s.spikes_dropped == 1 and s.num_noc_spikes == 0
+
+
+# ---------------------------------------------------------------------------
+# MigrationAwareObjective: exact deltas
+
+
+def _wrapper(seed=0, k=12, num_cores=16, dead=(3, 11)):
+    rng = np.random.default_rng(seed)
+    traffic = rng.integers(0, 40, (k, k)).astype(np.int64)
+    np.fill_diagonal(traffic, 0)
+    base = make_objective("pairwise", traffic, num_cores, 4, mesh_h=4)
+    live = rng.permutation(num_cores)
+    move_weight = rng.integers(1, 50, k)
+    dead_mask = np.zeros(num_cores, dtype=bool)
+    dead_mask[list(dead)] = True
+    obj = MigrationAwareObjective(base, live, move_weight,
+                                  migration_cost=2.5, dead_cores=dead_mask,
+                                  forbid_penalty=1e5)
+    return obj, base, rng
+
+
+def test_migration_objective_total_decomposes():
+    obj, base, rng = _wrapper()
+    live = obj.live
+    p = rng.permutation(16)
+    assert obj.total(p) == pytest.approx(base.total(p) + obj.penalty_total(p))
+    # the live placement pays no migration, only any dead-core forbids
+    pen_live = obj.penalty_total(live)
+    forb = obj.forbid_penalty * (obj.real & obj.dead[live]).sum()
+    assert pen_live == pytest.approx(forb)
+
+
+def test_migration_objective_swap_deltas_exact():
+    obj, _, rng = _wrapper(seed=7)
+    p = rng.permutation(16)
+    obj.attach(p)
+    aa = rng.integers(0, 16, 64)
+    bb = (aa + rng.integers(1, 16, 64)) % 16
+    batch = obj.swap_delta_batch(aa, bb)
+    for i in range(aa.shape[0]):
+        a, b = int(aa[i]), int(bb[i])
+        sd = obj.swap_delta(a, b)
+        assert sd == pytest.approx(batch[i], abs=1e-9)
+        p2 = p.copy()
+        p2[a], p2[b] = p2[b], p2[a]
+        assert sd == pytest.approx(obj.total(p2) - obj.total(p), abs=1e-6)
+
+
+def test_migration_objective_apply_swaps_matches_recompute():
+    obj, _, rng = _wrapper(seed=11)
+    p = rng.permutation(16)
+    obj.attach(p.copy())  # attach keeps a live reference; keep p pristine
+    pairs = np.array([[0, 5], [1, 9], [2, 14]])  # disjoint positions
+    total = obj.apply_swaps(pairs)
+    q = p.copy()
+    for a, b in pairs:
+        q[a], q[b] = q[b], q[a]
+    np.testing.assert_array_equal(obj._placement, q)
+    assert total == pytest.approx(obj.total(q), abs=1e-6)
+    fresh = MigrationAwareObjective(obj.base, obj.live,
+                                    obj.move_cost[:obj.num_partitions] / 2.5,
+                                    migration_cost=2.5, dead_cores=obj.dead,
+                                    forbid_penalty=obj.forbid_penalty)
+    assert fresh.attach(q) == pytest.approx(total, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# eviction + remap
+
+
+@pytest.fixture(scope="module")
+def live_mapping():
+    """A partitioned + placed 440-neuron SNN on a 4x4 mesh (capacity 40
+    partition fill, remapped later with capacity-60 hardware headroom)."""
+    g = fanout_snn_graph(440, fan=8, seed=1)
+    pres = sneap_partition(g, capacity=40, seed=0, impl="vec")
+    rng = np.random.default_rng(0)
+    placement = rng.permutation(16)[:pres.k]
+    r = np.random.default_rng(3)
+    t = np.sort(r.integers(0, 40, 5000))
+    src = r.integers(0, 440, 5000)
+    dst = r.integers(0, 440, 5000)
+    return g, pres, placement, (t, src, dst)
+
+
+def test_evict_dead_partitions_vacates_and_respects_forbid(live_mapping):
+    g, pres, _, _ = live_mapping
+    dead_parts = np.array([2, 5])
+    w0 = partition_weights(g, pres.part, pres.k)
+    # refine_iters=0: pure minimal-movement eviction — only the evicted
+    # neurons change partition
+    part2, n_evicted = evict_dead_partitions(
+        g, pres.part, pres.k, capacity=60, dead_parts=dead_parts,
+        refine_iters=0)
+    assert n_evicted == int(w0[dead_parts].sum())
+    w2 = partition_weights(g, part2, pres.k)
+    assert (w2[dead_parts] == 0).all()
+    assert (w2 <= 60).all()
+    assert w2.sum() == w0.sum()
+    kept = ~np.isin(pres.part, dead_parts)
+    assert (part2[kept] == pres.part[kept]).all()
+    # with the bounded refine pass, seams may shift but the vacated
+    # partitions stay empty (the forbid mask) and capacity still holds
+    part3, _ = evict_dead_partitions(
+        g, pres.part, pres.k, capacity=60, dead_parts=dead_parts)
+    w3 = partition_weights(g, part3, pres.k)
+    assert (w3[dead_parts] == 0).all()
+    assert (w3 <= 60).all() and w3.sum() == w0.sum()
+
+
+def test_remap_deterministic_and_avoids_dead_cores(live_mapping):
+    g, pres, placement, (t, src, dst) = live_mapping
+    dead = np.zeros(16, dtype=bool)
+    dead[[int(placement[1]), int(placement[4])]] = True
+    kwargs = dict(capacity=60, seed=0, mapper_kwargs={"iters": 3000})
+    inc1 = incremental_remap(g, pres.part, placement, dead, t, src, dst,
+                             4, 4, k=pres.k, **kwargs)
+    inc2 = incremental_remap(g, pres.part, placement, dead, t, src, dst,
+                             4, 4, k=pres.k, **kwargs)
+    np.testing.assert_array_equal(inc1.part, inc2.part)
+    np.testing.assert_array_equal(inc1.placement, inc2.placement)
+    scr1 = scratch_remap(g, pres.part, placement, dead, t, src, dst,
+                         4, 4, **kwargs)
+    scr2 = scratch_remap(g, pres.part, placement, dead, t, src, dst,
+                         4, 4, **kwargs)
+    np.testing.assert_array_equal(scr1.part, scr2.part)
+    np.testing.assert_array_equal(scr1.placement, scr2.placement)
+    for res in (inc1, scr1):
+        w = partition_weights(g, res.part, res.k)
+        cores = res.placement[:res.k][w > 0]
+        assert not dead[cores].any(), res.strategy
+        assert res.neurons_migrated > 0
+    # the whole point: the incremental strategy moves (far) fewer neurons
+    assert inc1.neurons_migrated <= scr1.neurons_migrated
+    # at minimum, everything on the dead cores had to move
+    displaced = int(g.vwgt[dead[np.asarray(placement)[pres.part]]].sum())
+    assert inc1.neurons_migrated >= displaced
+
+
+def test_remap_eviction_when_mesh_is_short_on_cores(live_mapping):
+    g, pres, placement, (t, src, dst) = live_mapping
+    w0 = partition_weights(g, pres.part, pres.k)
+    n_real = int((w0 > 0).sum())
+    # kill enough populated cores that the survivors cannot host one
+    # partition each: eviction must dissolve exactly the excess
+    n_dead = 16 - n_real + 2
+    dead = np.zeros(16, dtype=bool)
+    dead[placement[np.flatnonzero(w0 > 0)[:n_dead]]] = True
+    assert n_real > 16 - int(dead.sum())
+    res = incremental_remap(g, pres.part, placement, dead, t, src, dst,
+                            4, 4, capacity=60, seed=0, k=pres.k,
+                            mapper_kwargs={"iters": 2000})
+    assert res.neurons_evicted > 0
+    w2 = partition_weights(g, res.part, res.k)
+    assert int((w2 > 0).sum()) <= 16 - int(dead.sum())
+    assert not dead[res.placement[:res.k][w2 > 0]].any()
+
+
+def test_remap_infeasible_degraded_mesh_names_deficit(live_mapping):
+    g, pres, placement, (t, src, dst) = live_mapping
+    dead = np.ones(16, dtype=bool)
+    dead[:7] = False  # 7 live x 60 = 420 < 440 neurons
+    with pytest.raises(ValueError, match=r"exceed 7 live cores.*by 20"):
+        incremental_remap(g, pres.part, placement, dead, t, src, dst,
+                          4, 4, capacity=60, k=pres.k)
+
+
+def test_capacity_errors_name_the_deficit():
+    with pytest.raises(ValueError, match=r"by 50.*needs >= 10 live cores"):
+        check_degraded_capacity(100, 10, 5)
+    check_degraded_capacity(100, 10, 10)  # exactly feasible: no raise
+    g = fanout_snn_graph(100, fan=4, seed=0)
+    with pytest.raises(ValueError, match=r"k=2 infeasible.*by 60.*need >= 5"):
+        sneap_partition(g, capacity=20, k=2)
+    with pytest.raises(ValueError, match="surviving partitions"):
+        # vacating 3 of 5 exactly-full partitions cannot fit
+        part = np.repeat(np.arange(5), 20)
+        evict_dead_partitions(g, part, 5, capacity=20,
+                              dead_parts=np.array([0, 1, 2]))
+
+
+# ---------------------------------------------------------------------------
+# failure detection
+
+
+def test_heartbeat_detect_flags_exactly_the_dead_cores():
+    dead = np.zeros(16, dtype=bool)
+    dead[[3, 7]] = True
+    monitor = HeartbeatMonitor(16)
+    assert heartbeat_detect(monitor, dead) == [3, 7]
+    healthy = HeartbeatMonitor(16)
+    assert heartbeat_detect(healthy, np.zeros(16, dtype=bool)) == []
+
+
+# ---------------------------------------------------------------------------
+# scenario driver
+
+
+@pytest.fixture(scope="module")
+def smoke_profile():
+    g = fanout_snn_graph(440, fan=8, seed=1)
+    r = np.random.default_rng(3)
+    n_spikes = 5000
+    t = np.sort(r.integers(0, 40, n_spikes))
+    src = r.integers(0, 440, n_spikes)
+    dst = r.integers(0, 440, n_spikes)
+    return ProfileResult(
+        name="smoke", graph=g, trace_t=t, trace_src=src, trace_dst=dst,
+        num_neurons=440, num_steps=40,
+        fire_counts=np.bincount(src, minlength=440), seconds=0.0,
+    )
+
+
+_TOOLCHAIN = dict(mesh_w=4, mesh_h=4, capacity=60, seed=0,
+                  partition_impl="vec", mapper_kwargs={"iters": 3000})
+
+
+def test_toolchain_empty_schedule_bit_identical(smoke_profile):
+    plain = run_toolchain(smoke_profile, **_TOOLCHAIN)
+    empty = run_toolchain(smoke_profile, fault_schedule=FaultSchedule([]),
+                          **_TOOLCHAIN)
+    assert_stats_identical(plain.noc, empty.noc)
+    assert plain.degradation is None
+    assert empty.degradation is not None
+    assert empty.degradation["remap_events"] == 0
+    assert empty.summary()["spikes_dropped"] == 0
+
+
+@pytest.mark.parametrize("strategy", ["incremental", "scratch"])
+def test_toolchain_midtrace_core_failure_remaps(smoke_profile, strategy):
+    baseline = run_toolchain(smoke_profile, **_TOOLCHAIN)
+    victims = tuple(int(c) for c in baseline.mapping.placement[:2])
+    sched = FaultSchedule([FaultEvent(20, "core", victims)])
+    res = run_toolchain(smoke_profile, fault_schedule=sched,
+                        remap_strategy=strategy, **_TOOLCHAIN)
+    s = res.summary()
+    assert s["remap_events"] == 1
+    assert s["remap_strategy"] == strategy
+    assert s["neurons_migrated"] > 0
+    # spikes bound for the dead cores drop during the detection lag
+    assert s["spikes_dropped"] > 0
+    assert res.degradation["dead_cores"] == 2
+    # conservation across the whole segmented replay
+    n = res.noc
+    assert (n.num_noc_spikes + n.num_local_spikes + n.spikes_dropped
+            == smoke_profile.num_spikes)
+    # degraded but alive: energy within a sane band of the baseline
+    assert n.dynamic_energy_pj > 0
+    assert res.phase_seconds["remap"] > 0
+
+
+def test_toolchain_link_failure_reroutes_without_remap(smoke_profile):
+    baseline = run_toolchain(smoke_profile, **_TOOLCHAIN)
+    hot = int(np.argmax(baseline.noc.per_link_hops))
+    sched = FaultSchedule([FaultEvent(10, "link", (hot,))])
+    res = run_toolchain(smoke_profile, fault_schedule=sched, **_TOOLCHAIN)
+    assert res.degradation["remap_events"] == 0
+    assert res.noc.detour_hops > 0
+    assert res.summary()["neurons_migrated"] == 0
