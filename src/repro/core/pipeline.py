@@ -155,14 +155,20 @@ def run_toolchain(
     scored per step in one vectorized delta call (optionally through the
     `kernels/swap_delta` MXU batch via ``score_backend``) and a
     conflict-free accepted subset is committed with an exact cost resync.
-    At 256 cores this is ~9x the scalar chain's proposals per second at
+    At 256 cores this is ~7x the scalar chain's proposals per second at
     matched quality (``results/bench_mapping_engine.csv``); the scalar
     chain (``impl="scalar"``, the default) remains the parity reference.
-    The tree objective pays a geometry re-measure per incident hyperedge
-    under either engine, so there batching only amortizes loop overhead
-    (~1x today; see the ROADMAP item on member-level span aggregates);
-    every search reports both ``avg_hop`` and ``tree_hop`` through the
-    shared evaluator regardless of which objective drove it.
+    The tree objective's batched path scores swaps from member-level
+    span aggregates (per-hyperedge top-2 column extremes plus
+    per-(edge, column) top-2 row extremes — see
+    `repro.core.placecost.TreeHopObjective`), so a destination move
+    prices each incident edge in O(1) instead of re-measuring its
+    route geometry: ~4x the scalar chain at 256 cores and first
+    usable at 1024 cores (32x32), where the same wall-clock budget
+    buys the batched engine a few percent *better* tree cost
+    (``eqclock_delta`` in the CSV).  Every search reports both
+    ``avg_hop`` and ``tree_hop`` through the shared evaluator
+    regardless of which objective drove it.
 
     Performance of ``objective="volume"``: with ``partition_impl="vec"``
     the refiner keeps the Φ(e, p) member-count table and the D* degree

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.nocsim.xy import multicast_tree_sizes
+from repro.nocsim.xy import multicast_tree_sizes, segment_extrema2, span_to
 
 from .graph import Hypergraph, csr_gather
 from .hopcost import hop_distance_matrix, swap_delta
@@ -53,6 +53,25 @@ __all__ = [
     "evaluate_placement",
     "PLACE_OBJECTIVES",
 ]
+
+
+def _sorted_isect(kx: np.ndarray, ky: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Membership masks of the intersection of two ascending key arrays.
+
+    Both inputs must be sorted with no internal duplicates (the incidence
+    keys are: candidate-major gathers over edge-sorted CSR rows, and a
+    position holds a given role in an edge at most once) — one
+    `searchsorted` merge then marks, on each side, the entries whose key
+    appears on the other side.
+    """
+    mx = np.zeros(kx.shape[0], dtype=bool)
+    my = np.zeros(ky.shape[0], dtype=bool)
+    if kx.shape[0] and ky.shape[0]:
+        ins = np.searchsorted(ky, kx)
+        ok = np.flatnonzero(ins < ky.shape[0])
+        mx[ok] = ky[ins[ok]] == kx[ok]
+        my[ins[mx]] = True
+    return mx, my
 
 
 class PairwiseObjective:
@@ -181,7 +200,49 @@ class TreeHopObjective:
 
     Swaps are scored incrementally: a CSR index maps each placement
     position (partition) to the hyperedges it is source or destination of,
-    and only those trees are re-measured under the candidate placement.
+    and each incident tree is re-priced in O(1) from member-level
+    aggregates instead of being re-measured member by member.
+
+    Aggregate invariants (maintained for the attached placement; all
+    quantities integer, so incremental sizes are *exact*, never drift):
+
+    * ``_cnt[e, c]`` — number of destination members of hyperedge ``e``
+      placed in mesh column ``c``.  Members are distinct partitions and a
+      placement is a permutation, so within one column of one edge the
+      member *rows* are distinct.
+    * ``_rmin1/_rmin2/_rmax1/_rmax2[e, c]`` — the two extreme (and
+      strictly distinct) destination rows of edge ``e`` in column ``c``,
+      with sentinels ``mesh_h``/``-1`` when fewer than two members occupy
+      the column (`repro.nocsim.xy.segment_extrema2`).
+    * ``_cmin1/_cmin2/_cmax1/_cmax2[e]`` — the two extreme *distinct
+      occupied* columns of edge ``e`` (sentinels ``mesh_w``/``-1``).
+
+    A tree's size is then the closed form (`repro.nocsim.xy.span_to`)
+
+      ``size(e) = span_to(sx, _cmin1[e], _cmax1[e])
+                + sum_c  [_cnt[e, c] > 0] * span_to(sy, _rmin1[e,c], _rmax1[e,c])``
+
+    with ``(sx, sy)`` the source partition's core coordinates — the same
+    horizontal-segment + per-column-vertical-segment algebra
+    `multicast_tree_sizes` evaluates by sorting route offsets, pinned
+    equal by the engine tests.  Because the aggregates do not involve the
+    source position at all, a candidate that moves only the *source* of an
+    edge re-evaluates this form over unchanged aggregates (O(mesh_w));
+    a candidate that moves one *destination* member re-prices the edge in
+    O(1): top-2 extremes make removal of a non-extreme member free and
+    extreme removal a fallback to the runner-up, insertion is a min/max
+    against the new coordinate.  Only candidates touching two members (or
+    a member and the source) of the same edge fall back to the exact
+    route-expansion re-measure.
+
+    The aggregates are maintained *lazily*: they are built on the first
+    `swap_delta_batch` call and commits only mark their member-touched
+    edges dirty, so the one batched rebuild reduction per search step is
+    amortized over the whole candidate batch — and the scalar
+    propose-then-commit chain (`swap_delta` + pending reuse), which never
+    scores batches, never pays for aggregates at all.  Any accepted-swap
+    sequence leaves the synced aggregates identical to a from-scratch
+    attach.
     """
 
     name = "tree"
@@ -243,24 +304,45 @@ class TreeHopObjective:
         )
         self.tdst = dpart[ent]
         self.num_hyperedges = t
+        self.lens = lens.astype(np.int64)
 
-        # CSR position -> incident hyperedge ids (source or destination).
-        # Positions >= k (virtual partitions) have empty rows, so swaps
-        # among them are free, exactly as the pairwise objective's
-        # zero-padded traffic makes them.
-        pos = np.concatenate([self.tsrc, self.tdst])
-        eid = np.concatenate(
-            [np.arange(t, dtype=np.int64), np.repeat(np.arange(t, dtype=np.int64), lens)]
-        )
-        order = np.argsort(pos, kind="stable")
-        self.ilist = eid[order]
-        iptr = np.zeros(num_cores + 1, dtype=np.int64)
-        np.add.at(iptr, pos + 1, 1)
-        self.iptr = np.cumsum(iptr)
+        # Split CSR incidence indexes: position -> hyperedges it is a
+        # destination member of (`imlist`/`imptr`) and position ->
+        # hyperedges it is the source of (`islist`/`isptr`).  Positions
+        # >= k (virtual partitions) have empty rows, so swaps among them
+        # are free, exactly as the pairwise objective's zero-padded
+        # traffic makes them.  Keeping the roles in separate indexes lets
+        # the batch scorer run the O(1) member-move and O(w) source-move
+        # paths over homogeneous record arrays with no per-record role
+        # masking; rows are edge-sorted (a position holds a given role in
+        # an edge at most once, so ids within a row are strictly
+        # increasing), so a candidate-major gather yields globally
+        # ascending (candidate, edge) keys and edges incident to *both*
+        # swapped positions fall out of `searchsorted` merges instead of
+        # per-batch argsorts.
+        meid = np.repeat(np.arange(t, dtype=np.int64), lens)
+        order = np.lexsort((meid, self.tdst))
+        self.imlist = meid[order]
+        imptr = np.zeros(num_cores + 1, dtype=np.int64)
+        np.add.at(imptr, self.tdst + 1, 1)
+        self.imptr = np.cumsum(imptr)
+        order = np.argsort(self.tsrc, kind="stable")
+        self.islist = np.arange(t, dtype=np.int64)[order]
+        isptr = np.zeros(num_cores + 1, dtype=np.int64)
+        np.add.at(isptr, self.tsrc + 1, 1)
+        self.isptr = np.cumsum(isptr)
 
         self._placement: np.ndarray | None = None
         self._sizes: np.ndarray | None = None
         self._total = 0.0
+        # Member-level aggregate tables (see the class docstring), built
+        # lazily by the first `swap_delta_batch` and re-synced from the
+        # `_dirty` edge list a commit leaves behind.
+        self._cnt: np.ndarray | None = None
+        self._rmin1 = self._rmin2 = self._rmax1 = self._rmax2 = None
+        self._cmin1 = self._cmin2 = self._cmax1 = self._cmax2 = None
+        self._dirty: list[np.ndarray] = []
+        self._dirty_src: list[np.ndarray] = []
         # Last single-pair proposal scored by `swap_delta`: (a, b, edges,
         # their re-measured sizes).  `apply_swaps` of that same pair
         # reuses the measurement instead of paying the geometry twice —
@@ -288,6 +370,69 @@ class TreeHopObjective:
         edges = np.arange(self.num_hyperedges, dtype=np.int64)
         return float((self.tw * self._sizes_of(edges, placement)).sum())
 
+    # -- aggregate maintenance ---------------------------------------------
+    def _agg_rebuild(self, edges: np.ndarray) -> None:
+        """Recompute the member-level aggregates of ``edges`` from scratch.
+
+        One batched top-2 reduction over the listed edges' members under
+        the attached placement — the vectorized form of the per-column
+        rescan an extreme-member removal needs, applied wholesale to the
+        touched edges of a commit.
+        """
+        w, h = self.mesh_w, self.mesh_h
+        ent, inst = csr_gather(self.tptr, edges)
+        d = self._placement[self.tdst[ent]]
+        c, r = d % w, d // w
+        # Sentinel-reset the listed edges' cells, then scatter the sparse
+        # top-2 reduction back over just the occupied ones — at larger
+        # meshes most (edge, column) cells are empty, and never
+        # materializing them keeps a commit's rebuild proportional to the
+        # members gathered, not the mesh width.
+        self._cnt[edges] = 0
+        self._rmin1[edges] = h
+        self._rmin2[edges] = h
+        self._rmax1[edges] = -1
+        self._rmax2[edges] = -1
+        self._cmin1[edges] = w
+        self._cmin2[edges] = w
+        self._cmax1[edges] = -1
+        self._cmax2[edges] = -1
+        useg, cnt, rmin1, rmin2, rmax1, rmax2 = segment_extrema2(
+            inst * w + c, r, h
+        )
+        if useg.shape[0] == 0:
+            return
+        ue, uc = useg // w, useg % w
+        gfi = edges[ue] * w + uc
+        self._cntf[gfi] = cnt
+        self._rmin1f[gfi] = rmin1
+        self._rmin2f[gfi] = rmin2
+        self._rmax1f[gfi] = rmax1
+        self._rmax2f[gfi] = rmax2
+        # Top-2 distinct occupied columns per edge, off the same sparse
+        # run: `useg` ascends, so each edge's occupied columns form one
+        # contiguous ascending slice whose boundary entries are the
+        # extremes and their runners-up.
+        m = ue.shape[0]
+        lastc = np.empty(m, dtype=bool)
+        lastc[-1] = True
+        np.not_equal(ue[1:], ue[:-1], out=lastc[:-1])
+        firstc = np.empty(m, dtype=bool)
+        firstc[0] = True
+        firstc[1:] = lastc[:-1]
+        fidx = np.flatnonzero(firstc)
+        lidx = np.flatnonzero(lastc)
+        eid = edges[ue[fidx]]
+        self._cmin1[eid] = uc[fidx]
+        self._cmax1[eid] = uc[lidx]
+        has2 = lidx > fidx
+        self._cmin2[eid[has2]] = uc[fidx[has2] + 1]
+        self._cmax2[eid[has2]] = uc[lidx[has2] - 1]
+
+    def _sizes_from_agg(self, edges: np.ndarray) -> np.ndarray:
+        """Closed-form tree sizes of ``edges`` from the synced span caches."""
+        return (self._hsp[edges] + self._vsp[edges].sum(axis=1)).astype(np.int64)
+
     # -- engine-facing incremental API ------------------------------------
     def attach(self, placement: np.ndarray) -> float:
         edges = np.arange(self.num_hyperedges, dtype=np.int64)
@@ -295,12 +440,90 @@ class TreeHopObjective:
         self._sizes = self._sizes_of(edges, placement)
         self._total = float((self.tw * self._sizes).sum())
         self._pending = None
+        # Aggregates are placement-derived: invalidate wholesale, the
+        # first batch scoring against this placement rebuilds them.
+        self._cnt = None
+        self._dirty = []
+        self._dirty_src = []
         return self._total
+
+    def _span_refresh(self, edges: np.ndarray) -> None:
+        """Refresh the derived per-edge span caches of ``edges``.
+
+        ``_srcx/_srcy`` are the source core's coordinates, ``_hsp`` the
+        edge's current horizontal span and ``_vsp[:, c]`` its current
+        vertical span in column ``c`` (0 for unoccupied columns, by the
+        sentinel algebra) — all derived from the aggregate tables plus the
+        attached placement, so the member-move path reads the *current*
+        spans as gathers and computes only the changed ones.
+        """
+        s = self._placement[self.tsrc[edges]]
+        w = self.mesh_w
+        sx = (s % w).astype(np.int32)
+        sy = (s // w).astype(np.int32)
+        self._srcx[edges] = sx
+        self._srcy[edges] = sy
+        self._hsp[edges] = span_to(sx, self._cmin1[edges], self._cmax1[edges])
+        self._vsp[edges] = span_to(
+            sy[:, None], self._rmin1[edges], self._rmax1[edges]
+        )
+
+    def _agg_sync(self) -> None:
+        """Bring the aggregate tables up to date with the placement.
+
+        The first call allocates and builds every table; later calls
+        rebuild only what commits marked dirty since the last sync — a
+        full member reduction for edges whose *members* moved, just the
+        derived span caches for edges whose *source* moved — one batched
+        pass per search step, amortized over the whole candidate batch
+        scored against it.
+        """
+        t, w = self.num_hyperedges, self.mesh_w
+        if self._cnt is None:
+            self._cnt = np.zeros((t, w), dtype=np.int32)
+            self._rmin1 = np.empty((t, w), dtype=np.int32)
+            self._rmin2 = np.empty((t, w), dtype=np.int32)
+            self._rmax1 = np.empty((t, w), dtype=np.int32)
+            self._rmax2 = np.empty((t, w), dtype=np.int32)
+            self._cmin1 = np.empty(t, dtype=np.int32)
+            self._cmin2 = np.empty(t, dtype=np.int32)
+            self._cmax1 = np.empty(t, dtype=np.int32)
+            self._cmax2 = np.empty(t, dtype=np.int32)
+            self._vsp = np.empty((t, w), dtype=np.int32)
+            self._hsp = np.empty(t, dtype=np.int32)
+            self._srcx = np.empty(t, dtype=np.int32)
+            self._srcy = np.empty(t, dtype=np.int32)
+            # Raveled views of the per-(edge, column) tables: the
+            # member-move path gathers at computed flat indices, cheaper
+            # than 2D fancy indexing (the tables are written in place by
+            # `_agg_rebuild`, so the views stay valid).
+            self._cntf = self._cnt.ravel()
+            self._rmin1f = self._rmin1.ravel()
+            self._rmin2f = self._rmin2.ravel()
+            self._rmax1f = self._rmax1.ravel()
+            self._rmax2f = self._rmax2.ravel()
+            self._vspf = self._vsp.ravel()
+            edges = np.arange(t, dtype=np.int64)
+            self._agg_rebuild(edges)
+            self._span_refresh(edges)
+        else:
+            mem = None
+            if self._dirty:
+                d = self._dirty
+                mem = d[0] if len(d) == 1 else np.unique(np.concatenate(d))
+                self._agg_rebuild(mem)
+            d = self._dirty_src + ([mem] if mem is not None else [])
+            if d:
+                edges = d[0] if len(d) == 1 else np.unique(np.concatenate(d))
+                self._span_refresh(edges)
+        self._dirty = []
+        self._dirty_src = []
 
     def _incident(self, positions: np.ndarray) -> np.ndarray:
         """Deduplicated hyperedges incident to any of ``positions``."""
-        ent, _ = csr_gather(self.iptr, positions)
-        return np.unique(self.ilist[ent])
+        me, _ = csr_gather(self.imptr, positions)
+        se, _ = csr_gather(self.isptr, positions)
+        return np.unique(np.concatenate([self.imlist[me], self.islist[se]]))
 
     def swap_delta(self, a: int, b: int) -> float:
         e = self._incident(np.array([a, b], dtype=np.int64))
@@ -316,38 +539,142 @@ class TreeHopObjective:
     def swap_delta_batch(self, aa: np.ndarray, bb: np.ndarray) -> np.ndarray:
         """(B,) independent candidate deltas against the attached placement.
 
-        Re-measures only the hyperedges incident to each candidate's two
-        positions — all candidates expanded into one flat (candidate,
-        hyperedge, destination) replica list and measured by a single
-        `multicast_tree_sizes` call.
+        Aggregate-priced: each candidate re-prices only the hyperedges
+        incident to its two positions — O(1) per edge whose destination
+        *member* moves, O(mesh_w) per edge whose *source* moves, and the
+        exact route-expansion fallback only for the rare edges incident
+        to both swapped positions.  Every contribution is an integer
+        tree-size change times the integer fire weight, each delta a sum
+        of exactly representable floats — so batched deltas equal the
+        scalar `swap_delta` values bitwise, not approximately.
         """
         aa = np.asarray(aa, dtype=np.int64)
         bb = np.asarray(bb, dtype=np.int64)
         nb = aa.shape[0]
+        self._agg_sync()
         p = self._placement
-        ea, ca = csr_gather(self.iptr, aa)
-        eb, cb = csr_gather(self.iptr, bb)
-        cand = np.concatenate([ca, cb])
-        edges = self.ilist[np.concatenate([ea, eb])]
-        # One evaluation per distinct (candidate, hyperedge): a hyperedge
-        # incident to both swapped positions must not be counted twice.
-        ukey = np.unique(cand * np.int64(self.num_hyperedges) + edges)
-        if ukey.shape[0] == 0:
+        t, w = self.num_hyperedges, self.mesh_w
+        mea, mca = csr_gather(self.imptr, aa)
+        meb, mcb = csr_gather(self.imptr, bb)
+        sea, sca = csr_gather(self.isptr, aa)
+        seb, scb = csr_gather(self.isptr, bb)
+        ma_e, mb_e = self.imlist[mea], self.imlist[meb]
+        sa_e, sb_e = self.islist[sea], self.islist[seb]
+        if (ma_e.shape[0] + mb_e.shape[0] + sa_e.shape[0] + sb_e.shape[0]) == 0:
             return np.zeros(nb, dtype=np.float64)
-        c, e = ukey // self.num_hyperedges, ukey % self.num_hyperedges
-        ent, inst = csr_gather(self.tptr, e)
-        # Each candidate's placement is the attached one with two entries
-        # exchanged; materializing all B small rows once turns the member
-        # core lookups into plain 2D gathers.
-        pmat = np.broadcast_to(p, (nb, p.shape[0])).copy()
-        rows = np.arange(nb)
-        pmat[rows, aa] = p[bb]
-        pmat[rows, bb] = p[aa]
-        src_core = pmat[c, self.tsrc[e]][inst]
-        dst_core = pmat[c[inst], self.tdst[ent]]
-        new_sizes = self._tree_sizes(e, src_core, dst_core, inst, e.shape[0])
+        paa, pbb = p[aa], p[bb]
+        p32a, p32b = paa.astype(np.int32), pbb.astype(np.int32)
+
+        # Dual incidence — an edge touching both swapped positions — comes
+        # out of sorted-key merges between the four role-homogeneous
+        # incidence gathers.  Member+member duals just exchange two dest
+        # cores: the dest multiset (and so the tree) is unchanged and the
+        # contribution exactly zero, so both records are dropped.  Only
+        # source+member duals need the exact route-expansion fallback.
+        mm_a, mm_b = _sorted_isect(mca * t + ma_e, mcb * t + mb_e)
+        sm_a, sm_b = _sorted_isect(sca * t + sa_e, mcb * t + mb_e)
+        ms_a, ms_b = _sorted_isect(mca * t + ma_e, scb * t + sb_e)
+        fb_e = fb_c = None
+        if sm_a.any() or ms_a.any():
+            fb_e = np.concatenate([sa_e[sm_a], ma_e[ms_a]])
+            fb_c = np.concatenate([sca[sm_a], mca[ms_a]])
+            sa_e, sca = sa_e[~sm_a], sca[~sm_a]
+            sb_e, scb = sb_e[~ms_b], scb[~ms_b]
+        drop = mm_a | ms_a
+        if drop.any():
+            keep = ~drop
+            ma_e, mca = ma_e[keep], mca[keep]
+        drop = mm_b | sm_b
+        if drop.any():
+            keep = ~drop
+            mb_e, mcb = mb_e[keep], mcb[keep]
+
+        # One single-sided record per remaining (candidate, edge): that
+        # candidate moves the record's incident position from core `o`
+        # to core `n2`, the other position doesn't touch this edge.
+        # Coordinates and spans are int32 throughout — half the memory
+        # traffic of the default int64, which is what bounds this path.
+
+        # Destination-member move: O(1) re-pricing from the top-2
+        # extremes — remove (old column, old row), insert (new column,
+        # new row), re-span only the one or two affected segments against
+        # the cached current spans.
+        cand = np.concatenate([mca, mcb])
         deltas = np.zeros(nb, dtype=np.float64)
-        np.add.at(deltas, c, self.tw[e] * (new_sizes - self._sizes[e]))
+        if cand.shape[0]:
+            e = np.concatenate([ma_e, mb_e])
+            o = np.concatenate([p32a[mca], p32b[mcb]])
+            n2 = np.concatenate([p32b[mca], p32a[mcb]])
+            c, r = o % w, o // w
+            c2, r2 = n2 % w, n2 // w
+            sx, sy = self._srcx[e], self._srcy[e]
+            fi = e * w + c
+            fi2 = e * w + c2
+            cmax1, cmax2 = self._cmax1[e], self._cmax2[e]
+            cmin1, cmin2 = self._cmin1[e], self._cmin2[e]
+            gone = self._cntf[fi] == 1  # removal empties column c
+            cmax_rm = np.where(gone & (c == cmax1), cmax2, cmax1)
+            cmin_rm = np.where(gone & (c == cmin1), cmin2, cmin1)
+            hs = span_to(
+                sx, np.minimum(cmin_rm, c2), np.maximum(cmax_rm, c2)
+            ) - self._hsp[e]
+            # Old column: rows are distinct within a column, so removing
+            # the extreme falls back to the runner-up exactly.
+            rmax1c, rmax2c = self._rmax1f[fi], self._rmax2f[fi]
+            rmin1c, rmin2c = self._rmin1f[fi], self._rmin2f[fi]
+            rmax_rm = np.where(r == rmax1c, rmax2c, rmax1c)
+            rmin_rm = np.where(r == rmin1c, rmin2c, rmin1c)
+            same = c2 == c
+            prmax = np.where(same, np.maximum(rmax_rm, r2), rmax_rm)
+            prmin = np.where(same, np.minimum(rmin_rm, r2), rmin_rm)
+            v_c = span_to(sy, prmin, prmax) - self._vspf[fi]
+            # New column (when different): plain insertion against the
+            # current extremes (sentinels make the empty case exact).
+            rmax1c2, rmin1c2 = self._rmax1f[fi2], self._rmin1f[fi2]
+            v_c2 = np.where(
+                same,
+                0,
+                span_to(sy, np.minimum(rmin1c2, r2), np.maximum(rmax1c2, r2))
+                - self._vspf[fi2],
+            )
+            contrib = self.tw[e] * (hs + v_c + v_c2)
+            # (the cast is for numpy's empty-weighted-bincount int64 quirk)
+            deltas += np.bincount(cand, weights=contrib, minlength=nb).astype(
+                np.float64, copy=False
+            )
+
+        # Source move: aggregates are source-independent, so the new size
+        # is the closed form over unchanged tables at the new source core
+        # (sentinel columns span 0, so no occupancy mask is needed).
+        cand = np.concatenate([sca, scb])
+        if cand.shape[0]:
+            e = np.concatenate([sa_e, sb_e])
+            s2 = np.concatenate([p32b[sca], p32a[scb]])
+            sx, sy = s2 % w, s2 // w
+            hspan = span_to(sx, self._cmin1[e], self._cmax1[e])
+            vspan = span_to(sy[:, None], self._rmin1[e], self._rmax1[e]).sum(
+                axis=1, dtype=np.int64
+            )
+            contrib = self.tw[e] * (hspan + vspan - self._sizes[e])
+            deltas += np.bincount(cand, weights=contrib, minlength=nb).astype(
+                np.float64, copy=False
+            )
+
+        if fb_e is not None:
+            ci = fb_c
+            ent2, inst2 = csr_gather(self.tptr, fb_e)
+
+            def swapped_core(x, i):
+                px = p[x]
+                px = np.where(x == aa[i], pbb[i], px)
+                return np.where(x == bb[i], paa[i], px)
+
+            src_core = swapped_core(self.tsrc[fb_e], ci)[inst2]
+            dst_core = swapped_core(self.tdst[ent2], ci[inst2])
+            ns = self._tree_sizes(fb_e, src_core, dst_core, inst2, fb_e.shape[0])
+            deltas += np.bincount(
+                ci, weights=self.tw[fb_e] * (ns - self._sizes[fb_e]), minlength=nb
+            )
         return deltas
 
     def apply_swaps(self, pairs: np.ndarray, total_delta: float | None = None) -> float:
@@ -356,11 +683,14 @@ class TreeHopObjective:
         Exact: hyperedges not incident to any swapped position keep their
         cached tree size, incident ones are re-measured under the final
         placement, so the returned total is the true cost — no incremental
-        drift even though the batch was *scored* with per-candidate deltas.
-        Committing the single pair `swap_delta` just scored reuses its
-        measurement (``total_delta`` itself is ignored here: the size
-        cache must be refreshed regardless, and the pending measurement
-        already carries the delta).
+        drift even though the batch was *scored* with per-candidate
+        deltas.  Committing the single pair `swap_delta` just scored
+        reuses its measurement (``total_delta`` itself is ignored here:
+        the size cache must be refreshed regardless, and the pending
+        measurement already carries the delta).  When the lazy aggregate
+        tables are live, edges whose *members* moved are marked dirty for
+        the next `swap_delta_batch` sync; source-only edges stay clean —
+        the aggregates never involve the source position.
         """
         pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
         if pairs.shape[0] == 0:
@@ -369,13 +699,36 @@ class TreeHopObjective:
         aa, bb = pairs[:, 0], pairs[:, 1]
         pending = self._pending
         self._pending = None
-        if (pairs.shape[0] == 1 and pending is not None
-                and pending[0] == int(aa[0]) and pending[1] == int(bb[0])):
+        p[aa], p[bb] = p[bb].copy(), p[aa].copy()
+        use_pending = (pairs.shape[0] == 1 and pending is not None
+                       and pending[0] == int(aa[0]) and pending[1] == int(bb[0]))
+        if use_pending:
             _, _, touched, new_sizes = pending
-            p[aa], p[bb] = p[bb].copy(), p[aa].copy()
-        else:
-            p[aa], p[bb] = p[bb].copy(), p[aa].copy()
-            touched = self._incident(np.concatenate([aa, bb]))
+        if not use_pending or self._cnt is not None:
+            pos = np.concatenate([aa, bb])
+            me, _ = csr_gather(self.imptr, pos)
+            se, _ = csr_gather(self.isptr, pos)
+            mem = self.imlist[me]
+            srcd = self.islist[se]
+            if not use_pending:
+                touched = np.unique(np.concatenate([mem, srcd]))
+        if self._cnt is not None:
+            if mem.shape[0]:
+                self._dirty.append(np.unique(mem))
+            # Source-touched edges keep their aggregates but the derived
+            # span caches read the source coordinates — refresh those.
+            # (Each edge has one source and commits swap distinct
+            # positions, so this list is duplicate-free as built.)
+            if srcd.shape[0]:
+                self._dirty_src.append(srcd)
+            # Sync here rather than at the next batch scoring call: the
+            # refreshed span caches then price the touched trees in
+            # closed form, cheaper than the route-expansion re-measure.
+            self._agg_sync()
+            if not use_pending:
+                new_sizes = (self._sizes_from_agg(touched) if touched.shape[0]
+                             else self._sizes[touched])
+        elif not use_pending:
             new_sizes = (self._sizes_of(touched, p) if touched.shape[0]
                          else self._sizes[touched])
         if touched.shape[0]:

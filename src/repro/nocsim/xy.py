@@ -30,6 +30,8 @@ __all__ = [
     "multicast_tree_links",
     "multicast_tree_sizes",
     "routes_blocked",
+    "span_to",
+    "segment_extrema2",
 ]
 
 
@@ -303,6 +305,76 @@ def multicast_tree_sizes(
         + _packed_span(group * w + dx, dv, h, num_groups, scale=w)  # vertical
         + _packed_span(group, dh, w, num_groups)  # horizontal, source row
     )
+
+
+def span_to(origin, lo, hi):
+    """Length of the directed-link segment from ``origin`` toward [lo, hi].
+
+    ``max(hi - origin, 0) + max(origin - lo, 0)`` — the closed-form link
+    count of one tree segment (a row span measured from the source column,
+    or a column span measured from the source row), elementwise.  Computed
+    as the identical ``max(hi, origin) - min(lo, origin)`` (equal whenever
+    ``origin`` lies inside the dimension, whether or not the interval is
+    empty) — one op fewer, and the empty-interval sentinels the aggregate
+    tables use (``lo`` = dimension size, ``hi`` = -1) still make the span
+    0 without masking.
+    """
+    return np.maximum(hi, origin) - np.minimum(lo, origin)
+
+
+def segment_extrema2(
+    seg: np.ndarray, val: np.ndarray, vmax: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Occupied-segment (ids, count, min1, min2, max1, max2) of ``val``.
+
+    The top-2 reduction behind the tree-hop objective's incremental
+    aggregates (`repro.core.placecost.TreeHopObjective`): knowing the two
+    extreme members of every segment makes removing a *non-extreme* member
+    free and removing the extreme an O(1) fallback to the runner-up, so a
+    single-destination move re-prices a multicast-tree segment without
+    rescanning it.  One packed sort (`_packed_span`'s idiom: segments
+    contiguous, values ascending inside) yields all four extrema as
+    boundary picks.  ``val`` must lie in [0, vmax).
+
+    The reduction is *sparse*: only segments that have members are
+    reported, in ascending segment-id order, and the caller scatters into
+    (and sentinel-resets) its own tables — the segment space here is the
+    (edge, mesh column) grid, mostly empty at large meshes, and never
+    materializing the empty cells keeps a rebuild proportional to the
+    members touched, not the mesh.  Singleton segments carry the
+    ``vmax``/-1 runner-up sentinels `span_to` maps to span 0, so "no
+    runner-up" needs no separate masking downstream.
+    """
+    seg = np.asarray(seg, dtype=np.int64)
+    val = np.asarray(val, dtype=np.int64)
+    if seg.shape[0] == 0:
+        z = np.empty(0, dtype=np.int64)
+        return z, z, z, z, z, z
+    bits = int(max(vmax - 1, 1)).bit_length()
+    key = (seg << bits) | val
+    if ((int(seg.max()) + 1) << bits) < np.iinfo(np.int32).max:
+        key = np.sort(key.astype(np.int32)).astype(np.int64)
+    else:
+        key = np.sort(key)
+    kseg = key >> bits
+    kval = key & ((1 << bits) - 1)
+    m = key.shape[0]
+    last = np.empty(m, dtype=bool)
+    last[-1] = True
+    np.not_equal(kseg[1:], kseg[:-1], out=last[:-1])
+    first = np.empty(m, dtype=bool)
+    first[0] = True
+    first[1:] = last[:-1]
+    fidx = np.flatnonzero(first)
+    lidx = np.flatnonzero(last)
+    useg = kseg[fidx]
+    count = lidx - fidx + 1
+    min1 = kval[fidx]
+    max1 = kval[lidx]
+    has2 = count > 1
+    min2 = np.where(has2, kval[np.minimum(fidx + 1, m - 1)], vmax)
+    max2 = np.where(has2, kval[np.maximum(lidx - 1, 0)], -1)
+    return useg, count, min1, min2, max1, max2
 
 
 def _packed_span(seg: np.ndarray, off: np.ndarray, radius: int,

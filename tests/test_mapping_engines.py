@@ -107,6 +107,154 @@ def test_apply_swaps_keeps_exact_total(objective):
 
 
 # ---------------------------------------------------------------------------
+# Member-level aggregates: the synced incremental state must equal a
+# from-scratch build after *arbitrary* accepted-swap sequences, and the
+# aggregate-priced batch deltas must equal the scalar chain bitwise —
+# every contribution is an integer tree-size change times an integer fire
+# weight, so exact equality (not allclose) is the contract.
+
+_AGG_TABLES = ("_cnt", "_rmin1", "_rmin2", "_rmax1", "_rmax2",
+               "_cmin1", "_cmin2", "_cmax1", "_cmax2",
+               "_hsp", "_vsp", "_srcx", "_srcy")
+
+
+def _assert_aggregates_match_scratch(obj, hyper, part):
+    """Synced tables, size cache and total == a fresh attach + sync."""
+    obj._agg_sync()
+    fresh = TreeHopObjective(hyper, part, obj.num_positions, obj.mesh_w,
+                             obj.mesh_h)
+    fresh.attach(obj._placement.copy())
+    fresh._agg_sync()
+    for name in _AGG_TABLES:
+        np.testing.assert_array_equal(
+            getattr(obj, name), getattr(fresh, name), err_msg=name)
+    np.testing.assert_array_equal(obj._sizes, fresh._sizes)
+    assert obj._total == fresh._total
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_tree_aggregates_match_scratch_after_swap_sequences(seed):
+    """Mixed scalar-pending and batched multi-pair commits leave the lazy
+    aggregates identical to a from-scratch measurement at every sync."""
+    g, part, obj = _tree_instance(seed=seed)
+    rng = np.random.default_rng(100 + seed)
+    obj.attach(rng.permutation(16).astype(np.int64))
+    for step in range(24):
+        if rng.random() < 0.5:
+            a, b = rng.choice(16, 2, replace=False)
+            d = obj.swap_delta(int(a), int(b))
+            obj.apply_swaps(np.array([[a, b]]), total_delta=d)
+        else:
+            m = int(rng.integers(1, 4))
+            pos = rng.choice(16, 2 * m, replace=False)
+            obj.swap_delta_batch(pos[:m], pos[m:])  # builds/syncs lazily
+            obj.apply_swaps(np.column_stack([pos[:m], pos[m:]]))
+        if step % 6 == 5:
+            _assert_aggregates_match_scratch(obj, g.hyper, part)
+    _assert_aggregates_match_scratch(obj, g.hyper, part)
+
+
+def test_tree_aggregates_directed_move_cases():
+    """Directed metamorphic cases on a handmade mesh layout: dest-only
+    moves (same and different column), horizontal/vertical extreme-member
+    removals, and source moves — each committed swap's scalar delta,
+    batch delta and aggregate state checked against full recompute."""
+    from repro.core.graph import build_hypergraph
+
+    n = 13
+    src = np.array([0, 0, 0, 4, 4])
+    dst = np.array([1, 2, 3, 8, 12])
+    fire = np.zeros(n, dtype=np.int64)
+    fire[0], fire[4] = 3, 5
+    hyper = build_hypergraph(n, src, dst, fire)
+    part = np.arange(n, dtype=np.int64)  # partition i == neuron i
+    obj = TreeHopObjective(hyper, part, 16, 4, 4)
+    # Identity placement on the 4x4 mesh: edge 0 = source core 0 with
+    # members on row 0, columns 1..3 (horizontal extremes); edge 1 =
+    # source core 4 with members down column 0, rows 2..3 (vertical).
+    obj.attach(np.arange(16, dtype=np.int64))
+    obj.swap_delta_batch(np.array([0]), np.array([1]))  # force build
+    for a, b in [
+        (3, 15),   # member-only: empties extreme column 3, same column re-entry
+        (2, 13),   # member-only: horizontal extreme removal to a new column
+        (12, 5),   # member-only: vertical extreme removal (row 3 of column 0)
+        (0, 10),   # source-only move of edge 0
+        (4, 3),    # source move landing on a member's old core
+        (8, 12),   # member-member swap inside one edge (dest set unchanged)
+    ]:
+        before = obj.total(obj._placement)
+        p2 = obj._placement.copy()
+        p2[a], p2[b] = p2[b], p2[a]
+        want = obj.total(p2) - before
+        got_batch = obj.swap_delta_batch(np.array([a]), np.array([b]))[0]
+        got_scalar = obj.swap_delta(a, b)
+        assert got_scalar == want
+        assert got_batch == want  # bitwise, not approximately
+        obj.apply_swaps(np.array([[a, b]]), total_delta=got_scalar)
+        _assert_aggregates_match_scratch(obj, hyper, part)
+
+
+def test_tree_dedup_merges_congruent_patterns_and_stays_exact():
+    """Hyperedges with identical (source partition, dest-partition set)
+    merge at construction with summed fire weights, and the aggregates
+    stay exact through swaps of the merged pattern's positions."""
+    from repro.core.graph import build_hypergraph
+
+    n = 8
+    src = np.array([0, 0, 1, 1, 6, 6])
+    dst = np.array([2, 3, 2, 3, 4, 5])
+    fire = np.array([3, 5, 1, 1, 1, 1, 2, 1], dtype=np.int64)
+    hyper = build_hypergraph(n, src, dst, fire)
+    # Neurons 0 and 1 share partition 0 and the dest set {1, 2}: their
+    # patterns are congruent under every placement and must merge.
+    part = np.array([0, 0, 1, 2, 3, 4, 5, 5], dtype=np.int64)
+    obj = TreeHopObjective(hyper, part, 9, 3, 3)
+    assert obj.num_hyperedges == 2
+    assert obj.tw.sum() == fire[0] + fire[1] + fire[6]
+    rng = np.random.default_rng(11)
+    obj.attach(rng.permutation(9).astype(np.int64))
+    for _ in range(12):
+        a, b = rng.choice(9, 2, replace=False)
+        p2 = obj._placement.copy()
+        p2[a], p2[b] = p2[b], p2[a]
+        want = obj.total(p2) - obj.total(obj._placement)
+        assert obj.swap_delta_batch(np.array([a]), np.array([b]))[0] == want
+        d = obj.swap_delta(int(a), int(b))
+        assert d == want
+        obj.apply_swaps(np.array([[a, b]]), total_delta=d)
+    _assert_aggregates_match_scratch(obj, hyper, part)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_tree_batch_delta_bitwise_equals_scalar(seed):
+    _, _, obj = _tree_instance(seed=seed)
+    rng = np.random.default_rng(30 + seed)
+    obj.attach(rng.permutation(16).astype(np.int64))
+    for _ in range(4):
+        aa = rng.integers(0, 16, 64)
+        b0 = rng.integers(0, 15, 64)
+        bb = np.where(b0 >= aa, b0 + 1, b0)
+        batch = obj.swap_delta_batch(aa, bb)
+        for i in range(64):
+            assert batch[i] == obj.swap_delta(int(aa[i]), int(bb[i]))
+        pos = rng.choice(16, 6, replace=False)
+        obj.apply_swaps(pos.reshape(3, 2))  # mutate state between rounds
+
+
+def test_tree_scalar_chain_never_builds_aggregates():
+    """The propose-then-commit scalar chain must not pay for the lazy
+    aggregate tables — they belong to the batched path alone."""
+    _, _, obj = _tree_instance(seed=6)
+    rng = np.random.default_rng(6)
+    obj.attach(rng.permutation(16).astype(np.int64))
+    for _ in range(10):
+        a, b = rng.choice(16, 2, replace=False)
+        d = obj.swap_delta(int(a), int(b))
+        obj.apply_swaps(np.array([[a, b]]), total_delta=d)
+    assert obj._cnt is None
+
+
+# ---------------------------------------------------------------------------
 # Tree objective == replay tree-link accounting.
 
 def test_closed_form_tree_sizes_match_route_expansion():

@@ -84,3 +84,50 @@ def test_energy_proportional_to_hops():
 def test_link_count():
     assert link_count(5, 5) == 2 * 4 * 5 + 2 * 5 * 4
     assert link_count(16, 16) == 2 * 15 * 16 * 2
+
+
+# ---------------------------------------------------------------------------
+# Span-aggregate helpers behind the tree-hop objective's incremental tables.
+
+
+def test_span_to_closed_form_and_sentinels():
+    from repro.nocsim.xy import span_to
+
+    # origin inside [lo, hi], left of it, right of it
+    assert span_to(2, 1, 5) == 4
+    assert span_to(0, 1, 5) == 5
+    assert span_to(7, 1, 5) == 6
+    # the empty-interval sentinels (lo = dim, hi = -1) give span 0
+    assert span_to(3, 8, -1) == 0
+    # elementwise over arrays
+    got = span_to(np.array([2, 0, 3]), np.array([1, 1, 8]), np.array([5, 5, -1]))
+    np.testing.assert_array_equal(got, [4, 5, 0])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_segment_extrema2_matches_bruteforce(seed):
+    from repro.nocsim.xy import segment_extrema2
+
+    rng = np.random.default_rng(seed)
+    nseg, vmax = 50, 12
+    m = int(rng.integers(1, 120))
+    seg = rng.integers(0, nseg, m)
+    val = rng.integers(0, vmax, m)
+    useg, cnt, mn1, mn2, mx1, mx2 = segment_extrema2(seg, val, vmax)
+    occupied = np.unique(seg)
+    np.testing.assert_array_equal(useg, occupied)  # sparse, ascending ids
+    for i, s in enumerate(occupied):
+        v = np.sort(val[seg == s])
+        assert cnt[i] == v.shape[0]
+        assert mn1[i] == v[0] and mx1[i] == v[-1]
+        if v.shape[0] >= 2:
+            assert mn2[i] == v[1] and mx2[i] == v[-2]
+        else:  # singleton: runner-up sentinels that span_to maps to 0
+            assert mn2[i] == vmax and mx2[i] == -1
+
+
+def test_segment_extrema2_empty_input():
+    from repro.nocsim.xy import segment_extrema2
+
+    out = segment_extrema2(np.empty(0, np.int64), np.empty(0, np.int64), 8)
+    assert all(a.shape == (0,) for a in out)
