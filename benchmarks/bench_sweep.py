@@ -1,0 +1,161 @@
+"""Batched toolchain sweep vs the sequential run_toolchain loop.
+
+The sweep driver (`repro.launch.sweep.run_sweep`) answers the
+design-space-exploration question — best (k, mesh, objective, mapper,
+seed) for a workload — in one shot: shared partition/traffic phases are
+deduplicated across the config grid, same-shape ``sa_jax`` searches run
+as one vmapped device program, and ``stepper="jax"`` replays share
+pow2-padded compiled programs.  This bench times that driver against the
+honest baseline — the same configs run one `run_toolchain` call at a
+time — and verifies *exact stat parity* per config along the way (every
+sequential summary must equal its sweep row bitwise; any divergence
+prints MISMATCH, a CI grep gate).
+
+Row families (trajectory ``sweep/*``):
+
+  * ``sweep/<mesh>_<n>cfg`` — sweep vs sequential wall-clock, the
+    partition-run dedup factor, and the Pareto-front size.
+  * ``sweep/parity`` — per-config exact-parity verdict over the whole
+    grid (``exact`` or ``MISMATCH``).
+  * ``sweep/measured_defaults`` — data-driven defaults for the
+    CPU-reasoned crossover knobs measured by the grid itself: mean phase
+    seconds per ``stepper``, ``score_backend``, and refiner-kernel knob
+    setting at this scale (closes ROADMAP's hardware-threshold item).
+
+``--smoke`` runs a small 6x6 grid for CI; full mode runs the
+acceptance-scale 16x16 grid (32+ configs) and writes
+``results/bench_sweep.csv``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from collections import defaultdict
+
+from repro.core import run_toolchain
+from repro.launch.sweep import config_grid, run_sweep
+
+from .common import emit, get_profile
+
+
+def _grids(smoke: bool):
+    """The config grid: device-bucketed sa_jax half + host-engine half."""
+    if smoke:
+        mesh, capacity, impl = (6, 6), 32, "vec"
+        jax_kw = [{"iters": 1500, "chains": 4}]
+        sa_kw = [{"impl": "vec", "iters": 1500, "score_backend": "numpy"}]
+        seeds, seeds_host = [0, 1], [0, 1]
+        knobs = [{}]
+        steppers = ["numpy", "jax"]
+    else:
+        mesh, capacity, impl = (16, 16), 8, "vec"
+        jax_kw = [{"iters": 4000, "chains": 8}, {"iters": 8000, "chains": 8}]
+        sa_kw = [{"impl": "vec", "iters": 4000, "score_backend": "numpy"},
+                 {"impl": "vec", "iters": 4000, "score_backend": "jnp"}]
+        seeds, seeds_host = [0, 1], [0, 1, 2, 3]
+        knobs = [{}, {"_KERNEL_MAX_N": 1024, "_KERNEL_MIN_K": 32}]
+        steppers = ["numpy", "jax"]
+    device = config_grid(
+        mesh=[mesh], capacity=[capacity], partition_impl=[impl],
+        seed=seeds, objective=["cut", "volume"], knobs=knobs,
+        mapper=["sa_jax"], mapper_kwargs=jax_kw, stepper=["jax"],
+    )
+    host = config_grid(
+        mesh=[mesh], capacity=[capacity], partition_impl=[impl],
+        seed=seeds_host, objective=["cut"], mapper=["sa"],
+        mapper_kwargs=sa_kw, stepper=steppers,
+    )
+    return device + host
+
+
+def _measured_defaults(rows: list[dict]) -> str:
+    """Mean phase seconds per knob setting -> recommended defaults."""
+    out = []
+    for axis, phase in (("stepper", "evaluate_s"),
+                        ("score_backend", "mapping_s"),
+                        ("knobs", "partition_s")):
+        groups = defaultdict(list)
+        for r in rows:
+            key = r[axis] if r[axis] else "default"
+            groups[key].append(float(r[phase]))
+        if len(groups) < 2:
+            continue
+        means = {k: sum(v) / len(v) for k, v in groups.items()}
+        best = min(means, key=means.get)
+        detail = " ".join(f"{k}:{v:.3f}s" for k, v in sorted(means.items()))
+        out.append(f"{axis}[{phase}] {detail} -> {best}")
+    return " | ".join(out)
+
+
+def run(full: bool = False, smoke: bool = False) -> list[dict]:
+    snn = "smooth_320" if smoke else "smooth_1280"
+    prof = get_profile(snn, full)
+    configs = _grids(smoke)
+    n = len(configs)
+    mesh = f"{configs[0].mesh_w}x{configs[0].mesh_h}"
+
+    # Sweep first: it pays every shared jit compile, so any cache warmth
+    # biases the comparison *against* the sweep, never for it.
+    t0 = time.perf_counter()
+    res = run_sweep(prof, configs, progress=lambda m: print(f"# {m}",
+                                                           file=sys.stderr))
+    sweep_s = time.perf_counter() - t0
+
+    # Sequential baseline doubles as the exact-parity check: every config
+    # re-runs through run_toolchain and its summary must equal the sweep
+    # row bitwise on all non-timing fields.
+    t0 = time.perf_counter()
+    mismatches = 0
+    for cfg, row in zip(configs, res.rows):
+        s = run_toolchain(prof, config=cfg).summary()
+        for k, v in s.items():
+            if not k.endswith("_s") and v != row[k]:
+                mismatches += 1
+                print(f"# MISMATCH {k}: sweep={row[k]} sequential={v} "
+                      f"(mapper={cfg.mapper} seed={cfg.seed} "
+                      f"objective={cfg.objective})", file=sys.stderr)
+    seq_s = time.perf_counter() - t0
+
+    part_runs = len({c.resolve(prof.graph.hyper).partition_key()
+                     for c in configs})
+    rows = [
+        {
+            "name": f"sweep/{mesh}_{n}cfg",
+            "us_per_call": round(sweep_s * 1e6, 1),
+            "derived": (
+                f"sweep_s={sweep_s:.2f};sequential_s={seq_s:.2f};"
+                f"speedup={seq_s / max(sweep_s, 1e-9):.2f}x;"
+                f"configs={n};partition_runs={part_runs};"
+                f"pareto_front={len(res.front())};workload={snn}"
+            ),
+        },
+        {
+            "name": "sweep/parity",
+            "us_per_call": 0.0,
+            "derived": (f"checked={n};parity="
+                        + ("exact" if mismatches == 0
+                           else f"MISMATCH({mismatches})")),
+        },
+        {
+            "name": "sweep/measured_defaults",
+            "us_per_call": 0.0,
+            "derived": _measured_defaults(res.rows) or "n/a",
+        },
+    ]
+    emit(rows, f"sweep driver vs sequential loop ({mesh}, {n} configs)")
+    if not smoke:
+        res.write_csv("results/bench_sweep_rows.csv")
+        import csv
+
+        with open("results/bench_sweep.csv", "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        run(smoke=True)
+    else:
+        run(full="--full" in sys.argv)

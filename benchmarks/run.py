@@ -19,12 +19,12 @@ def main() -> None:
     ap.add_argument("--only", choices=["partition", "mapping",
                                        "mapping_engine", "overall",
                                        "exec_time", "kernels", "nocsim",
-                                       "faults"])
+                                       "faults", "sweep"])
     args = ap.parse_args()
 
     from . import (bench_exec_time, bench_faults, bench_kernels,
                    bench_mapping_algos, bench_nocsim, bench_overall,
-                   bench_partition)
+                   bench_partition, bench_sweep)
 
     suites = {
         "partition": bench_partition.run,
@@ -35,6 +35,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "nocsim": bench_nocsim.run,
         "faults": bench_faults.run,
+        "sweep": bench_sweep.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

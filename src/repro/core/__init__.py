@@ -36,7 +36,15 @@ from .mapping import (
     tabu_search,
 )
 from .partition import PartitionResult, sneap_partition
-from .pipeline import ToolchainResult, run_toolchain
+from .pipeline import (
+    ToolchainConfig,
+    ToolchainResult,
+    evaluate_phase,
+    mapping_phase,
+    partition_phase,
+    phase_seeds,
+    run_toolchain,
+)
 from .placecost import (
     PLACE_OBJECTIVES,
     MigrationAwareObjective,
@@ -44,6 +52,7 @@ from .placecost import (
     TreeHopObjective,
     evaluate_placement,
     make_objective,
+    validate_objective,
 )
 from .remap import (
     RemapResult,
@@ -63,9 +72,11 @@ __all__ = [
     "pso_search", "sa_search", "tabu_search",
     "PLACE_OBJECTIVES", "PairwiseObjective", "TreeHopObjective",
     "MigrationAwareObjective", "evaluate_placement", "make_objective",
+    "validate_objective",
     "RemapResult", "check_degraded_capacity", "evict_dead_partitions",
     "incremental_remap", "scratch_remap",
     "PartitionResult", "sneap_partition",
     "greedy_kl_partition", "sco_partition", "sco_place",
-    "ToolchainResult", "run_toolchain",
+    "ToolchainConfig", "ToolchainResult", "run_toolchain",
+    "phase_seeds", "partition_phase", "mapping_phase", "evaluate_phase",
 ]

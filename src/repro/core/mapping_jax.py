@@ -38,7 +38,13 @@ from repro.kernels.swap_delta import swap_deltas
 from .hopcost import hop_distance_matrix
 from .mapping import MappingResult, pad_traffic
 
-__all__ = ["sa_search_jax", "greedy_polish", "polish_search", "island_sa"]
+__all__ = [
+    "sa_search_jax",
+    "sa_search_jax_batch",
+    "greedy_polish",
+    "polish_search",
+    "island_sa",
+]
 
 
 def _coords(num_cores: int, mesh_w: int) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -168,6 +174,113 @@ def sa_search_jax(
         history=hist,
         evaluations=int(iters) * int(chains),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "sweeps_per_temp"))
+def _sa_population_multi(
+    syms: jnp.ndarray,       # (C, NC, NC)
+    dist: jnp.ndarray,       # (NC, NC) shared across configs
+    placements: jnp.ndarray, # (C, P, NC)
+    keys: jnp.ndarray,       # (C, 2)
+    t0s: jnp.ndarray,        # (C,)
+    iters: int,
+    sweeps_per_temp: int,
+):
+    """`_sa_population` vmapped over a bucket of same-shape configs.
+
+    One device program advances every config's whole chain population in
+    lock-step; the per-config math is element-for-element the single-call
+    path's, so batched results are bitwise those of C sequential
+    `_sa_population` calls (pinned by the sweep parity tests).
+    """
+    return jax.vmap(
+        lambda s, p, k, t: _sa_population(s, dist, p, k, t, iters, sweeps_per_temp)
+    )(syms, placements, keys, t0s)
+
+
+def sa_search_jax_batch(
+    traffics: list[np.ndarray],
+    num_cores: int,
+    mesh_w: int,
+    trace_lengths: list[int],
+    seeds: list[int],
+    iters: int = 20_000,
+    chains: int = 16,
+    sweeps_per_temp: int = 64,
+    t0_frac: float = 0.25,
+    torus: bool = False,
+    polish: bool = True,
+    polish_backend: str = "auto",
+) -> list[MappingResult]:
+    """Batched `sa_search_jax`: one device program for a whole config bucket.
+
+    All configs must share ``(num_cores, mesh_w, iters, chains,
+    sweeps_per_temp, torus)`` — that is what makes their populations
+    stackable into one ``(C, P, NC)`` vmapped scan (the sweep driver's
+    bucketing key).  Traffic matrices may have different ``k`` (they are
+    zero-padded to ``num_cores`` exactly as the single path pads).  Each
+    config's RNG stream, initial placements, and temperature schedule are
+    derived per-seed identically to ``sa_search_jax(seed=s)``, so element
+    ``i`` of the returned list is bitwise the single call's result; the
+    polish tail runs per config through the same shape-cached kernel.
+    Reported ``seconds`` are the bucket wall-clock amortized per config.
+    """
+    start = time.perf_counter()
+    c = len(traffics)
+    if not (len(trace_lengths) == len(seeds) == c):
+        raise ValueError("traffics, trace_lengths, seeds must align")
+    if c == 0:
+        return []
+    ks = [int(t.shape[0]) for t in traffics]
+    syms_np = np.empty((c, num_cores, num_cores), dtype=np.float64)
+    for i, t in enumerate(traffics):
+        padded = pad_traffic(np.asarray(t, dtype=np.float64), num_cores)
+        syms_np[i] = padded + padded.T
+    syms = jnp.asarray(syms_np, dtype=jnp.float32)
+    dist = jnp.asarray(
+        hop_distance_matrix(num_cores, mesh_w, torus=torus), dtype=jnp.float32
+    )
+    kruns = []
+    placements = []
+    for s in seeds:
+        kinit, krun = jax.random.split(jax.random.PRNGKey(int(s)))
+        kruns.append(krun)
+        placements.append(
+            jax.vmap(lambda kk: jax.random.permutation(kk, num_cores))(
+                jax.random.split(kinit, chains)
+            )
+        )
+    placements = jnp.stack(placements)  # (C, P, NC)
+    c0s = jax.vmap(lambda s, p: _cost(s, p, dist))(syms, placements[:, 0])
+    t0s = t0_frac * c0s / jnp.asarray([max(k, 1) for k in ks], dtype=c0s.dtype)
+    placements, costs, best_hists = _sa_population_multi(
+        syms, dist, placements, jnp.stack(kruns), t0s, iters, sweeps_per_temp
+    )
+    if polish:
+        x, y = _coords(num_cores, mesh_w)
+    results = []
+    for i in range(c):
+        best_i = int(jnp.argmin(costs[i]))
+        best = placements[i, best_i]
+        if polish:
+            best, _ = greedy_polish(syms[i], best, x, y, backend=polish_backend)
+        denom = max(int(trace_lengths[i]), 1)
+        final_cost = float(_cost(syms[i], best, dist))
+        best_by_epoch = np.minimum.accumulate(
+            np.asarray(best_hists[i], dtype=np.float64).min(axis=0)
+        )
+        hist = [(float(j), cst / denom) for j, cst in enumerate(best_by_epoch)]
+        results.append(MappingResult(
+            placement=np.asarray(best)[: ks[i]].astype(np.int64),
+            avg_hop=final_cost / denom,
+            seconds=0.0,
+            history=hist,
+            evaluations=int(iters) * int(chains),
+        ))
+    seconds = (time.perf_counter() - start) / c
+    for r in results:
+        r.seconds = seconds
+    return results
 
 
 @functools.partial(jax.jit, static_argnames=("max_steps", "backend"))

@@ -11,10 +11,19 @@ by default it follows the objective ("volume" → "multicast"), so the
 partitioner, the placement search, and the simulator all measure the same
 quantity.  ``ToolchainResult.summary()`` reports both metrics for every
 run, which is what lets Figures 4-8 be regenerated under either model.
+
+One config path serves two drivers: `run_toolchain` executes a single
+`ToolchainConfig` end to end, and `repro.launch.sweep.run_sweep` executes
+a whole grid of them through the *same* phase functions
+(`partition_phase` / `mapping_phase` / `evaluate_phase`), deduplicating
+shared phases and batching device searches — so a sweep row is bitwise
+the stats of the corresponding single run.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
 
@@ -31,10 +40,130 @@ from .baselines import greedy_kl_partition, sco_partition, sco_place
 from .hopcost import traffic_matrix
 from .mapping import MAPPERS, OBJECTIVE_AWARE_MAPPERS, MappingResult
 from .partition import PartitionResult, sneap_partition
-from .placecost import evaluate_placement, make_objective
+from .placecost import evaluate_placement, make_objective, validate_objective
 from .remap import incremental_remap, scratch_remap
 
-__all__ = ["ToolchainResult", "run_toolchain"]
+__all__ = [
+    "ToolchainConfig",
+    "ToolchainResult",
+    "phase_seeds",
+    "apply_knobs",
+    "partition_phase",
+    "mapping_phase",
+    "evaluate_phase",
+    "run_toolchain",
+]
+
+
+def phase_seeds(seed: int) -> tuple[int, int, int]:
+    """Independent per-phase child seeds of one run seed.
+
+    ``(partition_seed, mapping_seed, remap_seed)``, derived via
+    ``np.random.SeedSequence(seed).spawn()`` so the phases' random streams
+    are statistically independent.  Historically the one run ``seed`` was
+    threaded verbatim into both ``sneap_partition`` and the mapper search,
+    so sweep replicates that varied only the seed drew lockstep-correlated
+    partition and placement streams; deriving children fixes that (and
+    deterministically changes every seeded run's exact results relative to
+    pre-fix versions — same quality, different draws).
+    """
+    children = np.random.SeedSequence(seed).spawn(3)
+    return tuple(int(c.generate_state(1)[0]) for c in children)
+
+
+@dataclass
+class ToolchainConfig:
+    """Full configuration of one toolchain run.
+
+    Mirrors `run_toolchain`'s keyword surface one-for-one (minus the
+    fault-scenario arguments, which stay per-call); `repro.launch.sweep`
+    builds grids of these and runs them through the shared phase
+    functions.  ``resolve()`` fills the ``cast``/``place_objective``
+    defaults and validates the enums; ``requested_place`` preserves
+    whether the caller *explicitly* asked for a placement objective
+    (explicit tree requests must error loudly on searches that cannot
+    honor them, while defaulted ones silently fall back).
+    """
+
+    method: str = "sneap"
+    mesh_w: int = 5
+    mesh_h: int = 5
+    capacity: int = 256
+    mapper: str = "sa"
+    seed: int = 0
+    noc_mode: str = "queued"
+    link_capacity: int = 4
+    mapper_kwargs: dict = field(default_factory=dict)
+    partition_impl: str = "scalar"
+    objective: str = "cut"
+    cast: str | None = None
+    place_objective: str | None = None
+    partition_kwargs: dict = field(default_factory=dict)
+    noc_kwargs: dict = field(default_factory=dict)
+    # Module-level engine threshold overrides applied for the run's
+    # duration, e.g. {"_KERNEL_MAX_N": 1024} to move the vec refiner's
+    # device-kernel crossover (see `repro.core.refine_vec`).  Swept by
+    # `repro.launch.sweep` to measure data-driven defaults.
+    knobs: dict = field(default_factory=dict)
+    # Filled by resolve(); callers normally never set these directly.
+    requested_place: str | None = None
+    resolved: bool = False
+
+    @property
+    def num_cores(self) -> int:
+        return self.mesh_w * self.mesh_h
+
+    def resolve(self, hyper=None) -> "ToolchainConfig":
+        """Validated copy with the ``cast``/``place_objective`` defaults filled."""
+        if self.resolved:
+            return self
+        if self.objective not in ("cut", "volume"):
+            raise ValueError(f"unknown objective {self.objective!r}")
+        cast = self.cast
+        if cast is None:
+            cast = "multicast" if self.objective == "volume" else "unicast"
+        place = self.place_objective
+        if place is None:
+            # Only SNEAP upgrades to the tree objective by default: the
+            # baselines reproduce published toolchains that place with
+            # pairwise spike counts (SpiNeMap's PSO, SCO's sequence), so
+            # they keep Eq. 2 unless the caller explicitly overrides.
+            place = ("tree" if cast == "multicast" and hyper is not None
+                     and self.method == "sneap" else "pairwise")
+        if place not in ("pairwise", "tree"):
+            raise ValueError(f"unknown place_objective {place!r}")
+        if self.method not in ("sneap", "spinemap", "sco"):
+            raise ValueError(f"unknown method {self.method!r}")
+        return dataclasses.replace(
+            self, cast=cast, place_objective=place,
+            requested_place=self.place_objective,
+            mapper_kwargs=dict(self.mapper_kwargs),
+            partition_kwargs=dict(self.partition_kwargs),
+            noc_kwargs=dict(self.noc_kwargs),
+            knobs=dict(self.knobs),
+            resolved=True,
+        )
+
+    # -- sweep sharing keys ------------------------------------------------
+    def partition_key(self) -> tuple:
+        """Configs with equal keys produce bitwise-identical partitions.
+
+        The mapping/evaluation knobs are excluded on purpose: two sweep
+        configs that differ only there share one partitioning run.  The
+        seed component is the *derived* partition child seed, so configs
+        with different run seeds never collide, and sco (which draws no
+        randomness) keys seed-free.
+        """
+        part_seed = 0 if self.method == "sco" else phase_seeds(self.seed)[0]
+        impl = self.partition_impl if self.method == "sneap" else ""
+        kw = self.partition_kwargs if self.method == "sneap" else {}
+        return (self.method, self.capacity, self.num_cores, impl,
+                self.objective, part_seed, tuple(sorted(kw.items())),
+                tuple(sorted(self.knobs.items())))
+
+    def traffic_key(self) -> tuple:
+        """Configs with equal keys share one (k, k) traffic matrix."""
+        return self.partition_key() + (self.cast,)
 
 
 @dataclass
@@ -88,6 +217,174 @@ class ToolchainResult:
         return out
 
 
+@contextmanager
+def apply_knobs(knobs: dict):
+    """Temporarily override `repro.core.refine_vec` module thresholds.
+
+    Knob names must be existing refine_vec attributes (e.g.
+    ``_KERNEL_MAX_N``, ``_KERNEL_MIN_K``, ``_PHI_MAX_ENTRIES``,
+    ``_DEG_CACHE_ENTRIES``, ``_DENSE_EVAL_ENTRIES``); unknown names raise
+    rather than silently sweeping a no-op axis.  Originals are restored on
+    exit even on error, so one config's knobs never leak into the next.
+    """
+    if not knobs:
+        yield
+        return
+    from . import refine_vec
+
+    saved = {}
+    for name in knobs:
+        if not hasattr(refine_vec, name):
+            raise ValueError(f"unknown refine_vec knob {name!r}")
+        saved[name] = getattr(refine_vec, name)
+    try:
+        for name, value in knobs.items():
+            setattr(refine_vec, name, value)
+        yield
+    finally:
+        for name, value in saved.items():
+            setattr(refine_vec, name, value)
+
+
+def partition_phase(profile: "ProfileResult", cfg: ToolchainConfig) -> PartitionResult:
+    """Run the configured partitioner (seeded with the partition child seed).
+
+    ``cfg.knobs`` overrides are live for the duration of this phase only —
+    they tune refiner thresholds, which nothing downstream reads.
+    """
+    with apply_knobs(cfg.knobs):
+        return _partition_phase(profile, cfg)
+
+
+def _partition_phase(profile: "ProfileResult", cfg: ToolchainConfig) -> PartitionResult:
+    part_seed = phase_seeds(cfg.seed)[0]
+    if cfg.method == "sneap":
+        pres = sneap_partition(profile.graph, capacity=cfg.capacity,
+                               seed=part_seed, max_k=cfg.num_cores,
+                               impl=cfg.partition_impl, objective=cfg.objective,
+                               **cfg.partition_kwargs)
+    elif cfg.method == "spinemap":
+        pres = greedy_kl_partition(profile.graph, capacity=cfg.capacity,
+                                   seed=part_seed, max_k=cfg.num_cores,
+                                   objective=cfg.objective)
+    elif cfg.method == "sco":
+        pres = sco_partition(profile.graph, capacity=cfg.capacity,
+                             objective=cfg.objective)
+    else:
+        raise ValueError(f"unknown method {cfg.method!r}")
+    if pres.k > cfg.num_cores:
+        raise ValueError(
+            f"{pres.k} partitions exceed {cfg.num_cores} cores; "
+            f"enlarge mesh or capacity"
+        )
+    return pres
+
+
+def build_traffic(profile: "ProfileResult", pres: PartitionResult,
+                  cfg: ToolchainConfig) -> np.ndarray:
+    """The (k, k) partition traffic matrix of a run (deterministic)."""
+    return traffic_matrix(pres.part, profile.trace_src, profile.trace_dst,
+                          pres.k, trace_t=profile.trace_t, cast=cfg.cast)
+
+
+def mapping_phase(
+    profile: "ProfileResult",
+    pres: PartitionResult,
+    cfg: ToolchainConfig,
+    traffic: np.ndarray | None = None,
+    objective=None,
+) -> tuple[MappingResult, str, np.ndarray, int]:
+    """Run the placement search + the shared evaluator.
+
+    ``traffic``/``objective`` let the sweep driver hand in artifacts
+    shared across configs (both are deterministic functions of the
+    partition and config, so sharing cannot change any stat; a shared
+    objective instance is safe because every search re-``attach``es it).
+    Returns ``(mres, place_objective, traffic, trace_len)`` — the final
+    place_objective may differ from the configured one where a search
+    cannot honor it (sco, device mappers).
+    """
+    cfg = cfg.resolve(profile.graph.hyper)
+    hyper = profile.graph.hyper
+    num_cores = cfg.num_cores
+    place_objective = cfg.place_objective
+    map_seed = phase_seeds(cfg.seed)[1]
+    if traffic is None:
+        traffic = build_traffic(profile, pres, cfg)
+    # Normalize average hop by the packet count of the chosen traffic model
+    # (== num_spikes for unicast; deduplicated multicast packets otherwise).
+    trace_len = int(traffic.sum())
+    mapper_kwargs = dict(cfg.mapper_kwargs)
+    if cfg.method == "sco":
+        if cfg.requested_place == "tree":
+            raise ValueError(
+                "method 'sco' places sequentially (no search), so an "
+                "explicit place_objective='tree' cannot be honored"
+            )
+        mres = sco_place(pres.k, num_cores)
+        place_objective = mres.objective  # no search ran; reported units
+    else:
+        mapper_name = "pso" if cfg.method == "spinemap" else cfg.mapper
+        search = MAPPERS[mapper_name]
+        if mapper_name in OBJECTIVE_AWARE_MAPPERS:
+            if "objective" in mapper_kwargs:
+                # A caller-supplied objective is stateful (attached
+                # placement, aggregate tables) and construction-bound to
+                # one (traffic, partition, mesh); reusing it across runs
+                # whose partition differs would silently score the wrong
+                # trees — reject loudly instead.
+                validate_objective(mapper_kwargs["objective"], traffic,
+                                   num_cores, mesh_w=cfg.mesh_w,
+                                   mesh_h=cfg.mesh_h, part=pres.part,
+                                   hyper=hyper,
+                                   torus=mapper_kwargs.get("torus", False))
+            else:
+                mapper_kwargs["objective"] = objective if objective is not None \
+                    else make_objective(
+                        place_objective, traffic, num_cores, cfg.mesh_w,
+                        mesh_h=cfg.mesh_h, hyper=hyper, part=pres.part,
+                    )
+            place_objective = mapper_kwargs["objective"].name
+        elif place_objective == "tree":
+            # Device mappers run the pairwise Eq. 2 reformulation only.
+            if cfg.requested_place == "tree":
+                raise ValueError(
+                    f"mapper {mapper_name!r} cannot run the tree objective; "
+                    f"pick one of {sorted(OBJECTIVE_AWARE_MAPPERS)}"
+                )
+            place_objective = "pairwise"
+        mres = search(traffic, num_cores, cfg.mesh_w, trace_len,
+                      seed=map_seed, **mapper_kwargs)
+    # One reporting path for every method: avg_hop (pairwise Eq. 2) and
+    # tree_hop both come from the shared evaluator, never from the search.
+    # The objective that drove the search (if any) is reused so its
+    # construction cost is not paid twice; `evaluate_placement` validates
+    # it against this run's traffic/partition before trusting it.
+    mres.avg_hop, mres.tree_hop = evaluate_placement(
+        mres.placement, traffic, num_cores, cfg.mesh_w, trace_len,
+        mesh_h=cfg.mesh_h, hyper=hyper, part=pres.part,
+        reuse=mapper_kwargs.get("objective"),
+    )
+    return mres, place_objective, traffic, trace_len
+
+
+def evaluate_phase(
+    profile: "ProfileResult",
+    pres: PartitionResult,
+    mres: MappingResult,
+    cfg: ToolchainConfig,
+) -> NoCStats:
+    """Fault-free NoC replay of the profiled trace under a finished mapping."""
+    cfg = cfg.resolve(profile.graph.hyper)
+    noc_args = dict(link_capacity=cfg.link_capacity, mode=cfg.noc_mode,
+                    cast=cfg.cast)
+    noc_args.update(cfg.noc_kwargs)
+    return simulate_noc(
+        profile.trace_t, profile.trace_src, profile.trace_dst,
+        pres.part, mres.placement, cfg.mesh_w, cfg.mesh_h, **noc_args,
+    )
+
+
 def run_toolchain(
     profile: "ProfileResult",
     method: str = "sneap",
@@ -109,6 +406,7 @@ def run_toolchain(
     remap_strategy: str = "incremental",
     remap_kwargs: dict | None = None,
     detect_windows: int = 2,
+    config: ToolchainConfig | None = None,
 ) -> ToolchainResult:
     """Run one toolchain (sneap | spinemap | sco) over a profiled SNN.
 
@@ -132,6 +430,25 @@ def run_toolchain(
     are forwarded to ``simulate_noc`` (e.g. ``inject_capacity``,
     ``energy``, ``engine``, ``stepper``, ``screen``) and override the
     ``link_capacity``/``noc_mode``/``cast`` arguments on conflict.
+    ``config`` replaces all of the above with one `ToolchainConfig`
+    (mutually exclusive with passing individual knobs).
+
+    Seeding: the one ``seed`` is split into independent per-phase child
+    seeds via ``np.random.SeedSequence(seed).spawn()`` (`phase_seeds`), so
+    the partition, mapping, and re-map random streams are decorrelated —
+    sweep replicates that vary only ``seed`` draw independent partition
+    *and* placement randomness instead of lockstep-correlated streams.
+    Results remain fully deterministic per seed.
+
+    Sweeps: to run a whole grid of configurations over one (or more)
+    profiled SNNs, use `repro.launch.sweep.run_sweep` instead of looping
+    over ``run_toolchain`` — it executes `ToolchainConfig` grids through
+    these same phase functions, deduplicates shared partition/traffic
+    work across configs, batches same-shape ``mapper="sa_jax"`` searches
+    into one vmapped device program, and emits a per-workload Pareto
+    report over (energy, latency, toolchain seconds); each sweep row is
+    bitwise the stats of the corresponding single ``run_toolchain`` call
+    (`results/bench_sweep.csv` records the wall-clock advantage).
 
     Performance of the evaluation phase: ``noc_mode="queued"`` runs the
     batched two-tier replay (`repro.nocsim.replay`) — contention-free
@@ -205,109 +522,47 @@ def run_toolchain(
     trigger a re-map: the placement objectives price hops, not individual
     links, so a re-map could not see the failure anyway.
     """
-    if objective not in ("cut", "volume"):
-        raise ValueError(f"unknown objective {objective!r}")
-    if cast is None:
-        cast = "multicast" if objective == "volume" else "unicast"
-    hyper = profile.graph.hyper
-    requested_place = place_objective
-    if place_objective is None:
-        # Only SNEAP upgrades to the tree objective by default: the
-        # baselines reproduce published toolchains that place with
-        # pairwise spike counts (SpiNeMap's PSO, SCO's sequence), so they
-        # keep Eq. 2 unless the caller explicitly requests otherwise.
-        place_objective = ("tree" if cast == "multicast" and hyper is not None
-                           and method == "sneap" else "pairwise")
-    if place_objective not in ("pairwise", "tree"):
-        raise ValueError(f"unknown place_objective {place_objective!r}")
-    num_cores = mesh_w * mesh_h
-    phase: dict[str, float] = {}
-    mapper_kwargs = dict(mapper_kwargs or {})
-    partition_kwargs = dict(partition_kwargs or {})
-    noc_kwargs = dict(noc_kwargs or {})
-
-    t0 = time.perf_counter()
-    if method == "sneap":
-        pres = sneap_partition(profile.graph, capacity=capacity, seed=seed,
-                               max_k=num_cores, impl=partition_impl,
-                               objective=objective, **partition_kwargs)
-    elif method == "spinemap":
-        pres = greedy_kl_partition(profile.graph, capacity=capacity, seed=seed,
-                                   max_k=num_cores, objective=objective)
-    elif method == "sco":
-        pres = sco_partition(profile.graph, capacity=capacity,
-                             objective=objective)
+    if config is not None:
+        cfg = config
     else:
-        raise ValueError(f"unknown method {method!r}")
-    phase["partition"] = time.perf_counter() - t0
-    if pres.k > num_cores:
-        raise ValueError(
-            f"{pres.k} partitions exceed {num_cores} cores; enlarge mesh or capacity"
+        cfg = ToolchainConfig(
+            method=method, mesh_w=mesh_w, mesh_h=mesh_h, capacity=capacity,
+            mapper=mapper, seed=seed, noc_mode=noc_mode,
+            link_capacity=link_capacity, mapper_kwargs=dict(mapper_kwargs or {}),
+            partition_impl=partition_impl, objective=objective, cast=cast,
+            place_objective=place_objective,
+            partition_kwargs=dict(partition_kwargs or {}),
+            noc_kwargs=dict(noc_kwargs or {}),
         )
+    cfg = cfg.resolve(profile.graph.hyper)
+    phase: dict[str, float] = {}
 
     t0 = time.perf_counter()
-    traffic = traffic_matrix(pres.part, profile.trace_src, profile.trace_dst,
-                             pres.k, trace_t=profile.trace_t, cast=cast)
-    # Normalize average hop by the packet count of the chosen traffic model
-    # (== num_spikes for unicast; deduplicated multicast packets otherwise).
-    trace_len = int(traffic.sum())
-    if method == "sco":
-        if requested_place == "tree":
-            raise ValueError(
-                "method 'sco' places sequentially (no search), so an "
-                "explicit place_objective='tree' cannot be honored"
-            )
-        mres = sco_place(pres.k, num_cores)
-        place_objective = mres.objective  # no search ran; reported units
-    else:
-        mapper_name = "pso" if method == "spinemap" else mapper
-        search = MAPPERS[mapper_name]
-        if mapper_name in OBJECTIVE_AWARE_MAPPERS:
-            if "objective" not in mapper_kwargs:
-                mapper_kwargs["objective"] = make_objective(
-                    place_objective, traffic, num_cores, mesh_w,
-                    mesh_h=mesh_h, hyper=hyper, part=pres.part,
-                )
-            place_objective = mapper_kwargs["objective"].name
-        elif place_objective == "tree":
-            # Device mappers run the pairwise Eq. 2 reformulation only.
-            if requested_place == "tree":
-                raise ValueError(
-                    f"mapper {mapper_name!r} cannot run the tree objective; "
-                    f"pick one of {sorted(OBJECTIVE_AWARE_MAPPERS)}"
-                )
-            place_objective = "pairwise"
-        mres = search(traffic, num_cores, mesh_w, trace_len, seed=seed, **mapper_kwargs)
-    # One reporting path for every method: avg_hop (pairwise Eq. 2) and
-    # tree_hop both come from the shared evaluator, never from the search.
-    # The objective that drove the search (if any) is reused so its
-    # construction cost is not paid twice.
-    mres.avg_hop, mres.tree_hop = evaluate_placement(
-        mres.placement, traffic, num_cores, mesh_w, trace_len,
-        mesh_h=mesh_h, hyper=hyper, part=pres.part,
-        reuse=mapper_kwargs.get("objective"),
-    )
+    pres = partition_phase(profile, cfg)
+    phase["partition"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    mres, place_objective, traffic, trace_len = mapping_phase(profile, pres, cfg)
     phase["mapping"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    noc_args = dict(link_capacity=link_capacity, mode=noc_mode, cast=cast)
-    noc_args.update(noc_kwargs)
     if fault_schedule is None:
-        noc = simulate_noc(
-            profile.trace_t, profile.trace_src, profile.trace_dst,
-            pres.part, mres.placement, mesh_w, mesh_h, **noc_args,
-        )
+        noc = evaluate_phase(profile, pres, mres, cfg)
         phase["evaluate"] = time.perf_counter() - t0
         degradation = None
     else:
+        noc_args = dict(link_capacity=cfg.link_capacity, mode=cfg.noc_mode,
+                        cast=cfg.cast)
+        noc_args.update(cfg.noc_kwargs)
         noc, degradation = _faulty_replay(
-            profile, pres, mres, mesh_w, mesh_h, capacity, noc_args, phase,
-            fault_schedule, remap_strategy, remap_kwargs, detect_windows,
-            objective, cast, place_objective, seed,
+            profile, pres, mres, cfg.mesh_w, cfg.mesh_h, cfg.capacity,
+            noc_args, phase, fault_schedule, remap_strategy, remap_kwargs,
+            detect_windows, cfg.objective, cfg.cast, place_objective,
+            phase_seeds(cfg.seed)[2],
         )
     return ToolchainResult(
-        method=method, snn=profile.name, partition=pres, mapping=mres,
-        noc=noc, phase_seconds=phase, objective=objective, cast=cast,
+        method=cfg.method, snn=profile.name, partition=pres, mapping=mres,
+        noc=noc, phase_seconds=phase, objective=cfg.objective, cast=cfg.cast,
         place_objective=place_objective, degradation=degradation,
     )
 
@@ -339,6 +594,7 @@ def _faulty_replay(
     fault state (this is where spikes to dead cores drop); the mapping is
     repaired; replay resumes on the new mapping.  Link-only events update
     the fault state at ``te`` with no detection lag and no re-map.
+    ``seed`` is the run's remap child seed (see `phase_seeds`).
     """
     if remap_strategy not in ("incremental", "scratch"):
         raise ValueError(f"unknown remap_strategy {remap_strategy!r}")

@@ -50,6 +50,7 @@ __all__ = [
     "TreeHopObjective",
     "MigrationAwareObjective",
     "make_objective",
+    "validate_objective",
     "evaluate_placement",
     "PLACE_OBJECTIVES",
 ]
@@ -99,6 +100,8 @@ class PairwiseObjective:
         padded[:k, :k] = traffic
         self.num_partitions = k
         self.num_positions = num_cores
+        self.mesh_w = mesh_w
+        self.torus = torus
         self.sym = padded + padded.T
         self.dist = hop_distance_matrix(num_cores, mesh_w, torus=torus).astype(
             np.float64
@@ -261,6 +264,11 @@ class TreeHopObjective:
             raise ValueError(f"{k} partitions > {num_cores} cores")
         self.num_partitions = k
         self.num_positions = num_cores
+        # Construction inputs, kept for `validate_objective`: the derived
+        # tables are bound to exactly this (hyper, part) pair, so reuse
+        # under a different partitioning must be detectable.
+        self._part = part.copy()
+        self._hyper = hyper
         self.mesh_w = mesh_w
         self.mesh_h = (
             mesh_h if mesh_h is not None else -(-num_cores // mesh_w)
@@ -877,6 +885,81 @@ def make_objective(
     raise ValueError(f"unknown placement objective {kind!r}")
 
 
+def validate_objective(
+    obj,
+    traffic: np.ndarray,
+    num_cores: int,
+    mesh_w: int | None = None,
+    mesh_h: int | None = None,
+    part: np.ndarray | None = None,
+    hyper: Hypergraph | None = None,
+    torus: bool = False,
+    strict: bool = True,
+) -> bool:
+    """Check that ``obj`` was built for this run's (traffic, partition, mesh).
+
+    Objective instances are stateful *and* construction-bound: a
+    ``PairwiseObjective`` bakes in the symmetrized traffic matrix, a
+    ``TreeHopObjective`` its partition-level multicast patterns.  Reusing
+    one across runs whose partition or traffic differ (the sweep hazard:
+    one ``mapper_kwargs={"objective": ...}`` dict shared over a config
+    grid) silently scores the wrong quantity.  Returns True when the
+    instance matches; on mismatch raises ``ValueError`` naming the
+    mismatched facet (``strict=True``, the search-time behavior) or
+    returns False (``strict=False``, the reporting-time behavior —
+    `evaluate_placement` then rebuilds a fresh objective instead).
+
+    Content comparisons run only when the identity fast path fails, so
+    the common flow — one objective built and consumed inside one run —
+    validates at pointer-compare cost.
+    """
+    def fail(msg: str) -> bool:
+        if strict:
+            raise ValueError(
+                f"reused {obj.name!r} objective does not match this run: "
+                f"{msg}; build a fresh objective per (traffic, partition, "
+                f"mesh) — see make_objective()"
+            )
+        return False
+
+    name = getattr(obj, "name", None)
+    if name not in ("pairwise", "tree"):
+        return fail(f"unexpected objective name {name!r}")
+    if obj.num_positions != num_cores:
+        return fail(f"built for {obj.num_positions} cores, run has {num_cores}")
+    if mesh_w is not None and obj.mesh_w != mesh_w:
+        return fail(f"built for mesh_w={obj.mesh_w}, run has {mesh_w}")
+    k = int(traffic.shape[0])
+    if name == "pairwise":
+        if obj.torus != torus:
+            return fail(f"built with torus={obj.torus}, run has {torus}")
+        if obj.num_partitions != k:
+            return fail(f"built for k={obj.num_partitions}, run has k={k}")
+        sym = np.asarray(traffic, dtype=np.float64)
+        if not np.array_equal(obj.sym[:k, :k], sym + sym.T):
+            return fail("traffic matrix content differs")
+        return True
+    if torus:
+        return fail("tree objective is mesh-only, run is torus")
+    if mesh_h is not None and obj.mesh_h != mesh_h:
+        return fail(f"built for mesh_h={obj.mesh_h}, run has {mesh_h}")
+    if part is not None:
+        part = np.asarray(part, dtype=np.int64)
+        if obj._part is not part and not np.array_equal(obj._part, part):
+            return fail("partition vector content differs")
+    if hyper is not None and obj._hyper is not hyper:
+        h0 = obj._hyper
+        same = (
+            np.array_equal(h0.hxadj, hyper.hxadj)
+            and np.array_equal(h0.hpins, hyper.hpins)
+            and np.array_equal(h0.hsrc, hyper.hsrc)
+            and np.array_equal(h0.hfire, hyper.hfire)
+        )
+        if not same:
+            return fail("hypergraph content differs")
+    return True
+
+
 def evaluate_placement(
     placement: np.ndarray,
     traffic: np.ndarray,
@@ -900,15 +983,26 @@ def evaluate_placement(
     when no hypergraph is available (or on torus meshes, which have no XY
     trees).  ``reuse`` accepts an already-built objective instance (either
     kind — e.g. the one that drove the search) so its construction cost is
-    not paid twice; scoring through it is stateless.
+    not paid twice; it is *validated* against this call's traffic/
+    partition/mesh first (`validate_objective`) and silently replaced by a
+    fresh build on mismatch, so an objective carried over from a different
+    run can never skew the reported stats; scoring through a matching one
+    is stateless (``total``), so its attached search state is irrelevant.
     """
     placement = np.asarray(placement, dtype=np.int64)
     denom = max(trace_length, 1)
-    pw = (reuse if reuse is not None and reuse.name == "pairwise"
+
+    def usable(kind: str) -> bool:
+        return (reuse is not None and getattr(reuse, "name", None) == kind
+                and validate_objective(reuse, traffic, num_cores, mesh_w,
+                                       mesh_h=mesh_h, part=part, hyper=hyper,
+                                       torus=torus, strict=False))
+
+    pw = (reuse if usable("pairwise")
           else PairwiseObjective(traffic, num_cores, mesh_w, torus=torus))
     avg_hop = pw.total(placement) / denom
     tree_hop = None
-    if reuse is not None and reuse.name == "tree":
+    if usable("tree"):
         tree_hop = reuse.total(placement) / denom
     elif hyper is not None and part is not None and not torus:
         tree = TreeHopObjective(hyper, part, num_cores, mesh_w, mesh_h)

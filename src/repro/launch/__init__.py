@@ -1,1 +1,5 @@
-"""Launchers: mesh construction, jitted train/serve steps, dry-run, roofline."""
+"""Launchers: mesh construction, jitted train/serve steps, dry-run, roofline,
+and the batched toolchain sweep driver (`repro.launch.sweep`)."""
+from .sweep import SweepResult, config_grid, pareto_flags, run_sweep
+
+__all__ = ["SweepResult", "config_grid", "pareto_flags", "run_sweep"]

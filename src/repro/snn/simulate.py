@@ -81,6 +81,28 @@ def _synapse_csr(n: int, src: np.ndarray, dst: np.ndarray) -> tuple[np.ndarray, 
     return np.cumsum(xadj), dst.astype(np.int64)
 
 
+def _cache_key(topo: SNNTopology, num_steps: int, seed: int, params: LIFParams) -> str:
+    """Content hash of everything that shapes the profiled trace.
+
+    The key covers the synapse lists and weights plus every trace-shaping
+    scalar (``input_size``/``input_rate``/``input_amp``/``target_spikes``),
+    not just the topology's name and size — rebuilding a same-name,
+    same-size topology with different connectivity must *miss* the cache,
+    never return another topology's stale profile.  "cc" marks the
+    content-keyed cache layout revision (supersedes "hg"; older files
+    simply miss and are regenerated).
+    """
+    h = hashlib.sha1(
+        f"{topo.name}/{num_steps}/{seed}/{params}/{topo.num_neurons}/"
+        f"{topo.input_size}/{topo.input_rate}/{topo.input_amp}/"
+        f"{topo.target_spikes}/cc".encode()
+    )
+    h.update(np.ascontiguousarray(topo.syn_src, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(topo.syn_dst, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(topo.weights, dtype=np.float32).tobytes())
+    return h.hexdigest()[:16]
+
+
 def profile_snn(
     topo: SNNTopology,
     num_steps: int = 1200,
@@ -92,11 +114,7 @@ def profile_snn(
     """Run the LIF simulation and extract graph + trace."""
     key = None
     if cache_dir is not None:
-        # "hg" marks the cache layout revision that added the hypergraph
-        # arrays; older cache files simply miss and are regenerated.
-        h = hashlib.sha1(
-            f"{topo.name}/{num_steps}/{seed}/{params}/{topo.num_neurons}/hg".encode()
-        ).hexdigest()[:16]
+        h = _cache_key(topo, num_steps, seed, params)
         key = Path(cache_dir) / f"profile_{topo.name}_{h}.npz"
         if key.exists():
             z = np.load(key, allow_pickle=False)

@@ -494,8 +494,11 @@ def small_profile():
 def test_run_toolchain_multicast_places_with_tree(small_profile):
     from repro.core import run_toolchain
 
+    # Four seeds: both arms are finite-budget SA chains, and with the
+    # SeedSequence-derived per-phase seeds a two-seed sample can draw an
+    # unlucky pair (per-seed ratios span ~0.91-1.08 at this budget).
     tree_hops = {"tree": 0.0, "pairwise": 0.0}
-    for seed in (0, 1):
+    for seed in (0, 1, 2, 3):
         res = run_toolchain(small_profile, method="sneap", mesh_w=5, mesh_h=5,
                             capacity=16, seed=seed, cast="multicast",
                             mapper_kwargs={"iters": 12_000})

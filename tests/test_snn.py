@@ -60,6 +60,30 @@ def test_profile_consistency_small():
         assert (int(prof.trace_src[i]), int(prof.trace_dst[i])) in syn
 
 
+def test_profile_cache_misses_on_content_change(tmp_path):
+    """Regression: same-name, same-size topology with different weights
+    must miss the cache instead of returning the stale profile."""
+    topo = make_snn("smooth_320")
+    first = profile_snn(topo, num_steps=100, seed=0, cache_dir=tmp_path)
+    assert len(list(tmp_path.glob("profile_*.npz"))) == 1
+
+    # Rebuild the "same" network with different synaptic weights.
+    mutated = make_snn("smooth_320")
+    mutated.weights = mutated.weights * 1.5
+    second = profile_snn(mutated, num_steps=100, seed=0, cache_dir=tmp_path)
+    assert len(list(tmp_path.glob("profile_*.npz"))) == 2  # cache miss
+    assert not np.array_equal(first.fire_counts, second.fire_counts) or \
+        first.num_spikes != second.num_spikes
+
+    # The unmutated topology still hits its own entry bitwise.
+    again = profile_snn(make_snn("smooth_320"), num_steps=100, seed=0,
+                        cache_dir=tmp_path)
+    assert len(list(tmp_path.glob("profile_*.npz"))) == 2  # cache hit
+    assert np.array_equal(first.trace_t, again.trace_t)
+    assert np.array_equal(first.trace_src, again.trace_src)
+    assert np.array_equal(first.fire_counts, again.fire_counts)
+
+
 def test_all_paper_snns_build():
     for name in PAPER_SNNS:
         topo = make_snn(name)
