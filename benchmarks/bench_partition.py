@@ -58,18 +58,18 @@ def synthetic_fanout_graph(n: int, fan: int = 12, seed: int = 0):
     return g
 
 
-# Tuned plateau budget for the fan-out speed rows.  Profiling the
-# n=4000 fan-out graph (ISSUE 7) shows the volume path's cost is not the
-# Φ updates but the *round structure*: ~1.2k refinement rounds at ~2 ms
-# of fixed numpy dispatch each (choose_targets + select_movers), with
-# only ~2 admitted movers per round at the coarse levels because the
-# fan-out hyperedges make almost every candidate pair co-scoped (tiny
-# conflict-free sets; more Luby rounds grow per-round cost as fast as
-# they shrink the round count).  Most of those rounds belong to the
-# plateau walk's escape-descend cycles: a stall budget of 2 (default 12)
-# drops wall-time ~40% for ~1.4% comm_volume on this regime, which the
-# ``*_tuned`` fields record so the knob's trade-off stays measured.
-_FANOUT_PLATEAU = 2
+# Tuned plateau budget for the fan-out speed rows.  The old per-hyperedge
+# conflict scoping admitted ~2 movers per round on the n=4000 fan-out
+# graph (every candidate pair co-scoped through the hub edges), making
+# the round-dispatch overhead the dominant cost (ISSUE 7).  The
+# per-(hyperedge, partition-column) slot scoping now admits every mover
+# whose Φ columns sit clear of a presence threshold — ~9 movers per
+# round on this graph — so fewer, fatter rounds both descend further
+# (better untuned comm_volume) and leave a cheaper plateau budget: a
+# stall budget of 1 (default 12) keeps the comm_volume premium under
+# the previously recorded +1.4% while the ``*_tuned`` fields keep the
+# knob's trade-off measured.
+_FANOUT_PLATEAU = 1
 
 
 def volume_row(name: str, graph, capacity: int = 64) -> dict:

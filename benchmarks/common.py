@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import csv
 import io
+import resource
 import sys
 from pathlib import Path
 
@@ -28,14 +29,46 @@ def get_profile(name: str, full: bool):
                        cache_dir=CACHE_DIR)
 
 
+def peak_memory() -> dict:
+    """Peak-memory telemetry: process RSS high-water plus, when a JAX
+    backend is live, the first device's allocator high-water.
+
+    ``ru_maxrss`` is monotone over the process lifetime (kilobytes on
+    Linux), so a row stamped mid-run records "peak so far" — benchmarks
+    that care about a specific phase call this right after the phase, and
+    ``emit`` back-fills every row that did not stamp itself.
+    """
+    mem = {"peak_rss_mb":
+           round(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0, 1)}
+    try:
+        import jax
+
+        stats = jax.local_devices()[0].memory_stats() or {}
+        peak = stats.get("peak_bytes_in_use")
+        if peak is not None:
+            mem["device_peak_mb"] = round(peak / 2**20, 1)
+    except Exception:
+        pass  # no jax / backend without memory_stats: RSS-only telemetry
+    return mem
+
+
 def emit(rows: list[dict], header: str = "") -> None:
-    """Print rows as CSV to stdout (the benchmark contract)."""
+    """Print rows as CSV to stdout (the benchmark contract).
+
+    Every row is stamped with ``peak_memory()`` telemetry columns; rows
+    that already carry a value (stamped at measurement time) keep theirs.
+    """
     if not rows:
         return
+    mem = peak_memory()
+    for row in rows:
+        for key, val in mem.items():
+            row.setdefault(key, val)
     if header:
         print(f"# {header}")
     buf = io.StringIO()
-    w = csv.DictWriter(buf, fieldnames=list(rows[0].keys()))
+    fields = list(dict.fromkeys(key for row in rows for key in row))
+    w = csv.DictWriter(buf, fieldnames=fields, restval="")
     w.writeheader()
     w.writerows(rows)
     sys.stdout.write(buf.getvalue())

@@ -19,12 +19,12 @@ def main() -> None:
     ap.add_argument("--only", choices=["partition", "mapping",
                                        "mapping_engine", "overall",
                                        "exec_time", "kernels", "nocsim",
-                                       "faults", "sweep"])
+                                       "faults", "sweep", "scale"])
     args = ap.parse_args()
 
     from . import (bench_exec_time, bench_faults, bench_kernels,
                    bench_mapping_algos, bench_nocsim, bench_overall,
-                   bench_partition, bench_sweep)
+                   bench_partition, bench_scale, bench_sweep)
 
     suites = {
         "partition": bench_partition.run,
@@ -36,6 +36,7 @@ def main() -> None:
         "nocsim": bench_nocsim.run,
         "faults": bench_faults.run,
         "sweep": bench_sweep.run,
+        "scale": bench_scale.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

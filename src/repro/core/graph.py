@@ -30,11 +30,15 @@ import numpy as np
 __all__ = [
     "Graph",
     "Hypergraph",
+    "IndexCapacityError",
+    "check_index_capacity",
+    "ShardedGraphView",
     "build_graph",
     "build_hypergraph",
     "dedup_hyperedges",
     "edge_cut",
     "comm_volume",
+    "comm_volume_sharded",
     "volume_degrees",
     "presence_degrees",
     "edge_partition_counts",
@@ -43,6 +47,53 @@ __all__ = [
     "partition_weights",
     "validate_partition",
 ]
+
+
+class IndexCapacityError(ValueError):
+    """A graph/hypergraph shape exceeds what the index dtypes can address.
+
+    Vertex ids are stored int32 (``adjncy``/``hpins``/``hsrc``); packed
+    (row, column) keys — ``edge * k + part`` and friends — are int64.  Past
+    those bounds arithmetic would wrap *silently*, so the builders raise
+    this named error at the boundary instead.  Checks are pure shape math:
+    no allocation happens before the raise.
+    """
+
+
+_INT32_MAX = np.iinfo(np.int32).max
+_INT64_MAX = np.iinfo(np.int64).max
+
+
+def check_index_capacity(
+    num_vertices: int,
+    num_hyperedges: int = 0,
+    k: int = 1,
+) -> None:
+    """Raise :class:`IndexCapacityError` if shapes overflow the index dtypes.
+
+    Guards (shape math only, no allocation):
+      * vertex ids must fit int32 — ``adjncy``/``hpins``/``hsrc`` store them
+        as int32 and a 2^31-th vertex would wrap negative;
+      * canonical edge keys ``lo * n + hi`` must fit int64;
+      * packed Φ keys ``edge * k + part`` must fit int64 (k up to the
+        partition count, edges up to max(n, E)).
+    """
+    n = int(num_vertices)
+    ne = max(int(num_hyperedges), n)
+    if n > _INT32_MAX:
+        raise IndexCapacityError(
+            f"num_vertices={n} exceeds int32 vertex-id capacity "
+            f"({_INT32_MAX}); adjncy/hpins/hsrc store int32 ids"
+        )
+    if n and n > _INT64_MAX // max(n, 1):
+        raise IndexCapacityError(
+            f"num_vertices={n}: edge keys lo*n+hi overflow int64"
+        )
+    if k and ne > _INT64_MAX // max(int(k), 1):
+        raise IndexCapacityError(
+            f"{ne} edges x k={k} partitions: packed keys edge*k+part "
+            "overflow int64"
+        )
 
 
 def csr_gather(xadj: np.ndarray, rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -284,6 +335,7 @@ def build_hypergraph(
     weights are the source's fire count (spikes delivered on that synapse),
     duplicates merged by summing.
     """
+    check_index_capacity(num_vertices)
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     fire_counts = np.asarray(fire_counts, dtype=np.int64)
@@ -425,6 +477,7 @@ def build_graph(
     Duplicate (src, dst) pairs are merged by summing weights; self-loops are
     dropped (a neuron's spike to itself never crosses the NoC).
     """
+    check_index_capacity(num_vertices)
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     weight = np.asarray(weight, dtype=np.int64)
@@ -486,6 +539,7 @@ def comm_volume(hyper: Hypergraph, part: np.ndarray) -> int:
     if ne == 0:
         return 0
     k = int(part.max()) + 1
+    check_index_capacity(hyper.num_vertices, ne, k)
     keys = np.concatenate(
         [
             hyper.pin_edge * k + part[hyper.hpins],
@@ -497,6 +551,131 @@ def comm_volume(hyper: Hypergraph, part: np.ndarray) -> int:
     return int((hyper.hfire * (lam - 1)).sum())
 
 
+class ShardedGraphView:
+    """Vertex-block sharded view of a :class:`Graph` (and its hypergraph).
+
+    Built from a ``VertexShardPlan`` (``repro.sharding.planner``) — here the
+    plan is duck-typed (``bounds``/``num_shards``/``block``) so the numpy
+    core never imports jax.  Each shard owns a contiguous vertex block;
+    because CSR rows are contiguous, a shard's adjacency slice
+    ``adjncy[xadj[lo]:xadj[hi]]`` is a zero-copy view.  The view's job is
+    the *halo* bookkeeping: for each shard, the set of non-local vertices
+    whose partition labels the shard's gain evaluations read.  Halos are
+    static (they depend on structure, not on the partition), so they are
+    computed once and the per-round "halo exchange" is a single gather of
+    ``part`` at the halo indices.
+
+    ``local_part`` assembles a full-length partition array holding only
+    block + halo values, everything else poisoned with ``fill`` — any
+    evaluation that reads outside its declared halo hits the poison and
+    fails loudly, which is how the metamorphic tests prove halo
+    sufficiency.
+    """
+
+    def __init__(self, graph: Graph, plan) -> None:
+        self.graph = graph
+        self.plan = plan
+        self._halos: dict[tuple[int, str], np.ndarray] = {}
+
+    @property
+    def num_shards(self) -> int:
+        return self.plan.num_shards
+
+    def halo(self, s: int, mode: str = "cut") -> np.ndarray:
+        """Sorted non-local vertex ids shard ``s`` reads (computed once).
+
+        ``mode="cut"``: neighbors of the block across graph edges.
+        ``mode="volume"``: co-members (source + pins) of every hyperedge
+        incident to the block — the multicast pin halo.
+        ``mode="local"``: empty — for evaluations that read only
+        block-local labels (e.g. D* rows from a live Φ table).
+        """
+        key = (s, mode)
+        if key not in self._halos:
+            lo, hi = self.plan.block(s)
+            g = self.graph
+            if mode == "local":
+                self._halos[key] = np.empty(0, dtype=np.int64)
+                return self._halos[key]
+            if mode == "cut":
+                ext = np.unique(g.adjncy[g.xadj[lo]:g.xadj[hi]].astype(np.int64))
+            elif mode == "volume":
+                hyper = g.hyper
+                if hyper is None:
+                    raise ValueError("volume halo needs graph.hyper")
+                vxadj, vedges = hyper.incidence()
+                ue = np.unique(vedges[vxadj[lo]:vxadj[hi]])
+                if ue.shape[0]:
+                    pidx, _ = csr_gather(hyper.hxadj, ue)
+                    ext = np.unique(np.concatenate([
+                        hyper.hpins[pidx].astype(np.int64),
+                        hyper.hsrc[ue].astype(np.int64),
+                    ]))
+                else:
+                    ext = np.empty(0, dtype=np.int64)
+            else:
+                raise ValueError(f"unknown halo mode {mode!r}")
+            self._halos[key] = ext[(ext < lo) | (ext >= hi)]
+        return self._halos[key]
+
+    def local_part(self, s: int, part: np.ndarray, mode: str = "cut",
+                   fill: int = -1) -> np.ndarray:
+        """Assemble shard ``s``'s view of ``part``: block + halo, rest poisoned."""
+        lo, hi = self.plan.block(s)
+        lpart = np.full(part.shape[0], fill, dtype=part.dtype)
+        lpart[lo:hi] = part[lo:hi]
+        halo = self.halo(s, mode)
+        lpart[halo] = part[halo]  # the halo exchange: one gather per round
+        return lpart
+
+
+def comm_volume_sharded(hyper: Hypergraph, part: np.ndarray, plan) -> int:
+    """``comm_volume`` computed shard-by-shard through halo-local views.
+
+    Each hyperedge is owned by the shard holding its source vertex; a shard
+    computes λ over its own edges reading only block + volume-halo partition
+    labels, and the partial volumes sum to the global objective for *every*
+    shard count — the halo-exchange correctness property the sharded engine
+    relies on.  Reads outside the declared halo raise (poison check) rather
+    than silently mis-counting.
+    """
+    part = np.asarray(part, dtype=np.int64)
+    ne = hyper.num_hyperedges
+    if ne == 0:
+        return 0
+    k = int(part.max()) + 1
+    check_index_capacity(hyper.num_vertices, ne, k)
+    g = Graph(
+        xadj=np.zeros(hyper.num_vertices + 1, dtype=np.int64),
+        adjncy=np.empty(0, dtype=np.int32),
+        adjwgt=np.empty(0, dtype=np.int64),
+        vwgt=np.ones(hyper.num_vertices, dtype=np.int64),
+        hyper=hyper,
+    )
+    view = ShardedGraphView(g, plan)
+    owner = np.searchsorted(np.asarray(plan.bounds), hyper.hsrc,
+                            side="right") - 1
+    total = 0
+    for s in range(plan.num_shards):
+        eids = np.nonzero(owner == s)[0].astype(np.int64)
+        if eids.shape[0] == 0:
+            continue
+        lpart = view.local_part(s, part, mode="volume")
+        pidx, plocal = csr_gather(hyper.hxadj, eids)
+        pin_p = lpart[hyper.hpins[pidx]]
+        src_p = lpart[hyper.hsrc[eids]]
+        if (pin_p < 0).any() or (src_p < 0).any():
+            raise AssertionError(
+                f"shard {s} read a partition label outside its halo")
+        keys = np.concatenate([
+            plocal * k + pin_p,
+            np.arange(eids.shape[0], dtype=np.int64) * k + src_p,
+        ])
+        lam = np.bincount(np.unique(keys) // k, minlength=eids.shape[0])
+        total += int((hyper.hfire[eids] * (lam - 1)).sum())
+    return total
+
+
 def edge_partition_counts(hyper: Hypergraph, part: np.ndarray, k: int) -> np.ndarray:
     """(E, k) member counts Φ(e, p): how many members (source + pins) of each
     hyperedge lie in each partition.  λ(e) is the number of nonzero columns
@@ -505,6 +684,7 @@ def edge_partition_counts(hyper: Hypergraph, part: np.ndarray, k: int) -> np.nda
     is the volume refiners' dominant allocation on large graphs."""
     part = np.asarray(part, dtype=np.int64)
     ne = hyper.num_hyperedges
+    check_index_capacity(hyper.num_vertices, ne, k)
     keys = np.concatenate([
         hyper.pin_edge * k + part[hyper.hpins].astype(np.int64),
         np.arange(ne, dtype=np.int64) * k + part[hyper.hsrc].astype(np.int64),

@@ -89,6 +89,8 @@ def sneap_partition(
     objective: str = "cut",
     hyper: Hypergraph | None = None,
     plateau_rounds: int | None = None,
+    shards=None,
+    stream_levels: bool = False,
 ) -> PartitionResult:
     """Partition an SNN graph into k parts of <= `capacity` neurons each.
 
@@ -115,6 +117,19 @@ def sneap_partition(
       plateau_rounds: stall budget of the vec refiner's Jet-style
          zero/negative-gain plateau walk (quality <-> time knob; None =
          per-objective default, 0 disables).  Ignored by ``impl="scalar"``.
+      shards: shard count (or ``sharding.planner.VertexShardPlan``) for the
+         device-sharded vec engine: matching proposes per vertex-block edge
+         slice and refinement evaluates per block against halo-assembled
+         partition views, bounding per-shard peak memory.  Matching results
+         are invariant under the shard count (hash tie keys on global edge
+         ids) and refinement is identical to single-host for a fixed
+         matching, so any two shard counts >= 1 produce the same partition.
+         ``None`` keeps the original single-host rng paths byte-for-byte.
+         Ignored by ``impl="scalar"``.
+      stream_levels: spill each coarsening level to a temporary on-disk
+         ``coarsen.LevelStore`` and uncoarsen out-of-core, holding at most
+         two levels resident (vec impl only).  Same result as in-memory
+         levels; trades re-load I/O for peak RSS.
     """
     if impl not in ("scalar", "vec"):
         raise ValueError(f"unknown partitioning impl {impl!r}")
@@ -153,8 +168,14 @@ def sneap_partition(
 
     # Coarse vertices must stay well under capacity or region growing jams.
     max_vwgt = max(1, capacity // 3)
+    store = None
+    if stream_levels and impl == "vec":
+        from .coarsen import LevelStore
+
+        store = LevelStore()
     levels = coarsen(graph, rng, coarsen_to=coarsen_to, max_vwgt=max_vwgt,
-                     impl=impl, contract_hyper=objective == "volume")
+                     impl=impl, contract_hyper=objective == "volume",
+                     shards=shards if impl == "vec" else None, store=store)
     coarse_part = greedy_region_growing(
         levels[-1], k, capacity, rng,
         impl="auto" if impl == "vec" else "scalar",
@@ -164,10 +185,14 @@ def sneap_partition(
 
         part, score = uncoarsen_vec(levels, coarse_part, k, capacity,
                                     max_nonimproving, objective=objective,
-                                    plateau_rounds=plateau_rounds)
+                                    plateau_rounds=plateau_rounds,
+                                    shards=shards)
     else:
         part, score = uncoarsen(levels, coarse_part, k, capacity,
                                 max_nonimproving, objective=objective)
+    num_levels = len(levels)
+    if store is not None:
+        store.close()
     seconds = time.perf_counter() - t0
     validate_partition(graph, part, k, capacity)
     if objective == "cut":
@@ -180,6 +205,6 @@ def sneap_partition(
         cut = edge_cut(graph, part)
     return PartitionResult(
         part=part, k=k, edge_cut=cut, capacity=capacity,
-        num_levels=len(levels), seconds=seconds, impl=requested_impl,
+        num_levels=num_levels, seconds=seconds, impl=requested_impl,
         objective=objective, comm_volume=vol,
     )

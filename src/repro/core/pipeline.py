@@ -499,6 +499,21 @@ def run_toolchain(
     on fan-out-heavy graphs; prefer the vec engine for graceful volume at
     scale.
 
+    Partition phase at scale: for million-neuron SNNs pass
+    ``partition_kwargs={"shards": S, "stream_levels": True}`` (vec impl
+    only).  ``shards`` runs coarsening's matching per vertex-block edge
+    slice and refinement per block against halo-assembled partition
+    views, bounding per-shard working memory; tie-breaking hashes global
+    edge ids, so the result is invariant under the shard count (any two
+    values of ``S`` produce the identical partition) and ``shards=None``
+    keeps the single-host rng path byte-for-byte.  ``stream_levels``
+    spills each coarsening level to an on-disk `repro.core.coarsen.
+    LevelStore` and uncoarsens out-of-core with at most two levels
+    resident, for identical results at bounded peak RSS.
+    ``benchmarks/bench_scale.py`` tracks both: the 1M-neuron/10M-synapse
+    run and the sharded-vs-single-host quality parity gate (<= 5%
+    comm_volume drift; measured ~0.03% at 100k neurons).
+
     Graceful degradation: ``fault_schedule`` (a `repro.runtime.faults.
     FaultSchedule`) injects core/link failures at trace-window boundaries.
     The evaluation phase then replays the trace in *segments*: each

@@ -183,25 +183,37 @@ class VolumeState:
 
     def apply_moves(self, movers: np.ndarray, srcs: np.ndarray,
                     dsts: np.ndarray) -> None:
-        """Batch Φ update for a *conflict-free* mover set.
+        """Batch Φ update for a simultaneous mover set.
 
-        Callers must guarantee no two movers share a hyperedge (the vec
-        refiner's Luby round does) — then every (hyperedge, column) pair
-        below is touched at most once and plain fancy indexing is exact.
+        Movers may share hyperedges — the fat conflict rounds admit several
+        movers per edge when no presence indicator is at risk — so the same
+        (hyperedge, column) slot can receive multiple ±1 updates.  Plain
+        fancy indexing would silently drop the duplicates; instead the
+        updates are merged per unique flat slot key (``edge * k + column``)
+        and applied buffered, which is both exact and faster than the
+        unbuffered ``np.add.at`` scatter.
         """
         idx, local = csr_gather(self.vxadj, movers)
         eids = self.vedges[idx]
-        self.phi[eids, srcs[local]] -= 1
-        self.phi[eids, dsts[local]] += 1
+        flat = self.phi.reshape(-1)
+        sk, sc = np.unique(eids * self.k + srcs[local], return_counts=True)
+        flat[sk] -= sc.astype(np.int32)
+        dk, dc = np.unique(eids * self.k + dsts[local], return_counts=True)
+        flat[dk] += dc.astype(np.int32)
 
     def touched_moves(self, movers: np.ndarray, srcs: np.ndarray,
                       dsts: np.ndarray) -> np.ndarray:
-        """Batch form of ``touched`` for a conflict-free mover set.
+        """Batch form of ``touched`` for a simultaneous mover set.
 
         Call *after* ``apply_moves``; returns every vertex whose cached D*
         row may have changed, applying the same critical-edge filter (only
         hyperedges where a move crossed a presence threshold invalidate
-        their members — see ``touched``).
+        their members — see ``touched``).  Valid for fat batches too: the
+        fat conflict predicate only admits multiple movers on a slot whose
+        post-batch count stays >= 2, so any slot that can cross a presence
+        threshold has exactly one mover and the per-move filter is exact;
+        multi-mover slots stay at >= 2 members, which the ``<= 1`` /
+        ``<= 2`` tests conservatively cover.
         """
         idx, local = csr_gather(self.vxadj, movers)
         eids = self.vedges[idx]

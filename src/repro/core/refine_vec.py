@@ -31,15 +31,39 @@ Both objectives run through the same loop (selected by ``objective``):
   adjacency.
 * ``"volume"`` — the degree matrix generalizes to the per-source
   distinct-partition presence matrix D* (λ-gain of a move =
-  D*[v, b] − D*[v, own], exact), and two candidates conflict when they
-  share a *hyperedge* (two pins of one source need not be graph-adjacent,
-  but their λ-gains interact).  The member-count table Φ(e, p) behind D*
-  is maintained *incrementally* across batches via the scalar engine's
-  ``refine.VolumeState`` (one small scatter per accepted mover set, the
-  batch mirror of the FM queue's per-move delta updates) instead of being
-  recounted from the partition vector every batch, and stale-gain
-  invalidation applies the same critical-edge filter: only hyperedges
-  where a move crossed a presence threshold re-activate their members.
+  D*[v, b] − D*[v, own], exact), and conflicts are scoped per
+  **(hyperedge, partition-column) slot**, not per hyperedge: a candidate
+  move (v, a→b) touches the slots (e, a) and (e, b) of each incident
+  hyperedge e, and a slot is *contended* only when at least two candidates
+  touch it AND its member count Φ(e, c) sits near a presence threshold
+  (Φ < 2, or Φ minus the slot's candidate leavers < 2).  On a thick slot
+  no ±1 traffic can flip the [Φ > 0] / [Φ > 1] indicators any gain or
+  cached D* row depends on, so arbitrarily many movers may share it with
+  exactly additive gains; only near-threshold slots serialize to one
+  max-priority winner per round.  This is the "fewer, fatter rounds"
+  restructure: a hub hyperedge between well-populated partitions no longer
+  throttles its members to one mover per round (the old per-hyperedge
+  scoping's fixed-dispatch bound on fan-out graphs), while destination
+  *capacity* contention stays exactly handled by grouped admission.  The
+  member-count table Φ(e, p) behind D* is maintained *incrementally*
+  across batches via the scalar engine's ``refine.VolumeState`` (one
+  merged scatter per accepted mover set, the batch mirror of the FM
+  queue's per-move delta updates) instead of being recounted from the
+  partition vector every batch, and stale-gain invalidation applies the
+  same critical-edge filter: only hyperedges where a move crossed a
+  presence threshold re-activate their members.
+
+**Sharded execution** (``shards=``): the same loop runs over contiguous
+vertex blocks from a ``repro.sharding.planner.plan_vertex_shards`` plan.
+Each iteration proposes per shard — degree rows are evaluated against a
+halo-assembled local partition view (one gather of boundary labels per
+round, the halo exchange; see ``graph.ShardedGraphView``) and the dense
+(rows, k) chunk plus the optional row cache are sized per *block* rather
+than per graph — then the mover set is committed globally through the
+same conflict selection and capacity admission.  Results are bitwise
+identical to the single-host path (evaluation is pure per row; only the
+scheduling and memory layout change), which is what lets a million-vertex
+level refine with per-shard-bounded dense state.
 
 When the positive-gain fixed point is reached the engine does not stop:
 a bounded Jet-style **plateau walk** runs zero- and bounded-negative-gain
@@ -68,6 +92,7 @@ import numpy as np
 from .graph import (
     Graph,
     Hypergraph,
+    ShardedGraphView,
     _mix64,
     comm_volume,
     csr_gather as _csr_gather,
@@ -137,6 +162,12 @@ _KERNEL_MIN_K = 64
 # back to from-scratch per-chunk recounts instead of incremental updates.
 _PHI_MAX_ENTRIES = 32_000_000
 
+# Slot-contention counts come from whole-table ``np.bincount`` passes while
+# the Φ table stays under this entry count (~8 MB int64 per count — a tight
+# C loop with no zeroing pass); larger tables use persistent int32 count
+# buffers updated with ``np.add.at`` and zeroed at the touched keys only.
+_SLOT_BINCOUNT_MAX = 1 << 20
+
 # Cached (n, k) degree/D* matrix cap (~128 MB float64).  Degree rows are
 # independent of partition *weights* — only target choice is — so caching
 # them makes capacity-retargeting a pure masked argmax over cached rows
@@ -154,6 +185,84 @@ _DENSE_EVAL_ENTRIES = 8_000_000
 # Boundary batches share `refine._MAX_DEG_ENTRIES`: rows * k entries per
 # evaluation chunk (~128 MB of float64); larger boundaries are swept in
 # row chunks.
+
+
+class _HostShardPlan:
+    """Minimal contiguous vertex-block plan (fallback when jax/planner is
+    unavailable); duck-type-compatible with ``planner.VertexShardPlan``."""
+
+    def __init__(self, n: int, num_shards: int):
+        num_shards = max(1, min(int(num_shards), max(1, n)))
+        self.bounds = (np.arange(num_shards + 1, dtype=np.int64) * n) // num_shards
+        self.sharding = None
+        self.notes = ["host-only blocks (planner unavailable)"]
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.bounds) - 1
+
+    def block(self, s: int) -> tuple[int, int]:
+        return int(self.bounds[s]), int(self.bounds[s + 1])
+
+
+def _as_vertex_plan(n: int, shards):
+    """Normalize a ``shards=`` argument (int or plan object) to a plan."""
+    if shards is None:
+        return None
+    if hasattr(shards, "bounds"):
+        return shards
+    try:
+        from repro.sharding.planner import plan_vertex_shards
+
+        return plan_vertex_shards(n, int(shards))
+    except ImportError:
+        return _HostShardPlan(n, int(shards))
+
+
+class _ShardedRowCache:
+    """(n, k) float64 row cache stored as one array per vertex block.
+
+    On a sharded run each block's rows live with their shard (the
+    per-device memory model), so the cache is enabled whenever the largest
+    *block* fits ``_DEG_CACHE_ENTRIES`` even when the global (n, k) matrix
+    would not.  Rows arriving at ``get``/``set``/``add_at`` are global
+    vertex ids; they are routed to blocks by the plan bounds.
+    """
+
+    def __init__(self, bounds: np.ndarray, k: int):
+        self.bounds = np.asarray(bounds, dtype=np.int64)
+        self.k = k
+        self.blocks = [
+            np.zeros((int(hi - lo), k))
+            for lo, hi in zip(self.bounds[:-1], self.bounds[1:])
+        ]
+
+    def _owners(self, rows: np.ndarray) -> np.ndarray:
+        return np.searchsorted(self.bounds, rows, side="right") - 1
+
+    def get(self, rows: np.ndarray) -> np.ndarray:
+        out = np.empty((rows.shape[0], self.k))
+        own = self._owners(rows)
+        for s, blk in enumerate(self.blocks):
+            m = own == s
+            if m.any():
+                out[m] = blk[rows[m] - self.bounds[s]]
+        return out
+
+    def set(self, rows: np.ndarray, vals: np.ndarray) -> None:
+        own = self._owners(rows)
+        for s, blk in enumerate(self.blocks):
+            m = own == s
+            if m.any():
+                blk[rows[m] - self.bounds[s]] = vals[m]
+
+    def add_at(self, rows: np.ndarray, cols: np.ndarray,
+               vals: np.ndarray) -> None:
+        own = self._owners(rows)
+        for s, blk in enumerate(self.blocks):
+            m = own == s
+            if m.any():
+                np.add.at(blk, (rows[m] - self.bounds[s], cols[m]), vals[m])
 
 
 def _row_edges(graph: Graph, rows: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -257,8 +366,17 @@ def refine_level_vec(
     plateau_cooldown: int = _PLATEAU_COOLDOWN,
     stats: dict | None = None,
     forbid: np.ndarray | None = None,
+    shards=None,
 ) -> tuple[np.ndarray, int]:
     """Refine ``part`` by batched moves; returns (part, score).
+
+    ``shards`` (int, ``VertexShardPlan``, or None) selects the sharded
+    execution mode: degree evaluation proceeds block-by-block against
+    halo-assembled local partition views, and the row cache is sized per
+    block (see the module docstring).  Semantically identical to the
+    single-host path — same movers, same score — with per-shard-bounded
+    dense intermediates; the kernel/dense-matmul fast paths are disabled
+    in favor of the chunked per-shard path.
 
     ``forbid`` is an optional (k,) boolean mask of partitions that may not
     *receive* movers (their effective capacity is zero); vertices already
@@ -302,6 +420,11 @@ def refine_level_vec(
         plateau_rounds = _PLATEAU_ROUNDS[objective]
     if max_iters is None:
         max_iters = _MAX_ITERS[objective]
+    plan = _as_vertex_plan(n, shards)
+    sview = None
+    if plan is not None and plan.num_shards > 1:
+        sview = ShardedGraphView(graph, plan)
+        use_kernel = False  # sharded mode keeps the chunked per-block path
     src = graph.edge_src
     nbr = adjncy.astype(np.int64)
     # Incremental Φ bookkeeping (the scalar FM queue's VolumeState, driven
@@ -319,9 +442,23 @@ def refine_level_vec(
             # Dense only where it wins: the sparse epilogue costs ~avg_inc
             # gather-bound entries per (row, column), the matmul ne
             # BLAS-rate flops — crossover around a 16x flop discount.
-            if n * ne <= _DENSE_EVAL_ENTRIES and avg_inc * 16 >= ne:
+            if (sview is None and n * ne <= _DENSE_EVAL_ENTRIES
+                    and avg_inc * 16 >= ne):
                 # Exact in float64: entries are hfire-weighted 0/1 sums.
                 dense_inc = _dense_incidence(hyper).astype(np.float64)
+    # Persistent flat slot buffers for select_movers, addressed by the
+    # packed key e * k + c directly — no per-call unique/searchsorted
+    # compression.  phi.size <= _PHI_MAX_ENTRIES < 2**31 whenever vstate
+    # exists, so int32 keys index them exactly; each call zeroes only the
+    # entries it touched.  Tables small enough for whole-table bincounts
+    # skip the toucher/leaver count buffers entirely (see select_movers).
+    slot_cnt = slot_out = slot_rank = slot_done = None
+    if vstate is not None:
+        if vstate.phi.size > _SLOT_BINCOUNT_MAX:
+            slot_cnt = np.zeros(vstate.phi.size, dtype=np.int32)
+            slot_out = np.zeros(vstate.phi.size, dtype=np.int32)
+        slot_rank = np.zeros(vstate.phi.size, dtype=np.int32)
+        slot_done = np.zeros(vstate.phi.size, dtype=bool)
     if use_kernel is None:
         use_kernel = False
         total_w = (int(adjwgt.sum()) if objective == "cut"
@@ -350,14 +487,16 @@ def refine_level_vec(
         row_cost *= max(avg_inc, 1.0)
     chunk = max(1, int(_MAX_DEG_ENTRIES / row_cost))
 
-    def eval_rows(rows_v: np.ndarray) -> np.ndarray:
+    def eval_rows(rows_v: np.ndarray, pvec: np.ndarray) -> np.ndarray:
+        """Degree rows of ``rows_v`` read against partition view ``pvec``
+        (the global vector, or a shard's halo-assembled local view)."""
         if objective == "cut":
             if use_kernel:
-                return _degrees_via_kernel(dense, part, k, rows_v, kernel_backend)
-            return partition_degrees(graph, part, k, rows=rows_v)
+                return _degrees_via_kernel(dense, pvec, k, rows_v, kernel_backend)
+            return partition_degrees(graph, pvec, k, rows=rows_v)
         if use_kernel:
             return _volume_degrees_via_kernel(
-                dense, hyper, part, k, rows_v, kernel_backend,
+                dense, hyper, pvec, k, rows_v, kernel_backend,
                 phi=None if vstate is None else vstate.phi)
         if dense_inc is not None:
             # One (rows, E) @ (E, 2k) BLAS call against the live Φ
@@ -367,13 +506,60 @@ def refine_level_vec(
                 [vstate.phi > 0, vstate.phi > 1], axis=1).astype(np.float64)
             both = dense_inc[rows_v] @ pres
             base, alt = both[:, :k], both[:, k:]
-            own = part[rows_v]
+            own = pvec[rows_v]
             r = np.arange(rows_v.shape[0])
             base[r, own] = alt[r, own]
             return base
         if vstate is not None:
-            return vstate.degrees_rows(part, rows_v)
-        return volume_degrees(hyper, part, k, rows=rows_v)
+            return vstate.degrees_rows(pvec, rows_v)
+        return volume_degrees(hyper, pvec, k, rows=rows_v)
+
+    # Halo flavor each shard's evals need: the live-Φ path reads only
+    # block-local labels, the from-scratch paths read neighbors (cut) or
+    # hyperedge co-members (volume).
+    if objective == "cut":
+        _halo_mode = "cut"
+    elif vstate is not None:
+        _halo_mode = "local"
+    else:
+        _halo_mode = "volume"
+
+    def eval_chunks(need: np.ndarray):
+        """Yield (rows chunk, partition view) pairs covering ``need``.
+
+        Single host: flat chunks against the global vector.  Sharded: rows
+        are routed to their vertex blocks (``need`` arrives sorted) and
+        each block's chunks evaluate against its halo-assembled local view
+        — one halo exchange per shard per iteration; labels outside
+        block + halo are poisoned, so an out-of-halo read fails loudly.
+        """
+        if sview is None:
+            for lo in range(0, need.shape[0], chunk):
+                yield need[lo:lo + chunk], part
+            return
+        for s, rows_s in enumerate(
+                np.split(need, np.searchsorted(need, plan.bounds[1:-1]))):
+            if rows_s.shape[0] == 0:
+                continue
+            lpart = sview.local_part(s, part, mode=_halo_mode)
+            for lo in range(0, rows_s.shape[0], chunk):
+                yield rows_s[lo:lo + chunk], lpart
+
+    def _slot_phi(slots: np.ndarray) -> np.ndarray:
+        """Member counts Φ(e, c) for packed (hyperedge, column) slot keys
+        ``e * k + c`` — from the live table when one exists, else counted
+        from the partition vector for just the slots' distinct edges."""
+        if vstate is not None:
+            return vstate.phi.reshape(-1)[slots].astype(np.int64)
+        ue = np.unique(slots // k)
+        pidx, pl = _csr_gather(hyper.hxadj, ue)
+        mkeys = np.concatenate([
+            ue[pl] * k + part[hyper.hpins[pidx]],
+            ue * k + part[hyper.hsrc[ue].astype(np.int64)],
+        ])
+        mkeys.sort()
+        return (np.searchsorted(mkeys, slots, side="right")
+                - np.searchsorted(mkeys, slots, side="left"))
 
     def select_movers(cand_idx: np.ndarray,
                       jitter_round: int | None = None) -> np.ndarray:
@@ -382,18 +568,30 @@ def refine_level_vec(
         Each round, a candidate survives if no co-scoped candidate has
         strictly higher (gain, -id) priority; survivors join the mover
         set, candidates co-scoped with a survivor drop out, and the
-        merely-beaten re-enter the next round.  One round alone yields
-        only a handful of movers on fan-out-heavy graphs (a hub hyperedge
-        suppresses all but one of its members), degenerating the batch
-        engine to near-sequential moves — a few rounds approach a maximal
-        independent set at a fraction of the per-iteration eval cost.
+        merely-beaten re-enter the next round.
 
         Cut: scopes are graph edges, so the pairwise scan over candidates'
-        adjacency rows is degree-bounded.  Volume: scopes are hyperedges —
-        the pairwise form would square a hub edge's pin count, so instead
-        each hyperedge reduces its candidate members to one max priority
-        and a candidate loses iff some incident edge's max beats it
-        (O(candidate incidences), no pin expansion).
+        adjacency rows is degree-bounded.
+
+        Volume: scopes are the **(hyperedge, column) slots** a move's ±1
+        Φ-updates land on — (e, own) and (e, target) for each incident
+        edge e.  A slot is *contended* only when at least two candidates
+        touch it and its count sits near a presence threshold:
+
+            touchers(e, c) > 1  and  (Φ(e, c) < 2
+                                      or Φ(e, c) − leavers(e, c) < 2)
+
+        Any mover subset confined to uncontended slots leaves every
+        [Φ > 0] / [Φ > 1] indicator unchanged there, so batch gains stay
+        exactly additive and the two-column delta updates stay exact;
+        contended slots admit one max-priority toucher per round (tracked
+        across rounds like the old per-edge flags).  Contention is
+        computed once per call over the full candidate set — safety is
+        monotone under taking subsets (fewer touchers, fewer leavers), so
+        later rounds never need to re-derive it.  Compared with the old
+        per-hyperedge scoping this is the "fat rounds" restructure: a hub
+        edge spanning well-populated partitions admits all its movers at
+        once instead of one per round.
 
         ``jitter_round`` (plateau escapes) perturbs the selection priority
         with a deterministic per-round hash of (vertex, round): consecutive
@@ -416,11 +614,99 @@ def refine_level_vec(
         remaining = cand_idx
         if objective == "volume":
             vxadj, vedges = hyper.incidence()
-            edge_used = np.zeros(hyper.num_hyperedges, dtype=bool)
-        else:
-            # 0 = not a candidate, 1 = still in the running, 2 = chosen.
-            status = np.zeros(n, dtype=np.int8)
-            status[cand_idx] = 1
+            nc = cand_idx.shape[0]
+            # One pair per (candidate, incident edge, side): every slot a
+            # move's +-1 lands on.  Gathered once; the rounds below work on
+            # boolean-masked views of these arrays, never re-gathering.
+            ei0, lc0 = _csr_gather(vxadj, cand_idx)
+            eids0 = vedges[ei0]
+            lc2 = np.concatenate([lc0, lc0])
+            if slot_done is not None:
+                # Flat persistent buffers addressed by the packed key
+                # e * k + c, computed in int32 outright (phi.size < 2^31
+                # whenever the live table exists, so the arithmetic is
+                # exact and skips an int64 pass + downcast).
+                base = eids0.astype(np.int32) * np.int32(k)
+                key = np.concatenate([
+                    base + part[cand_idx].astype(np.int32)[lc0],
+                    base + target_full[cand_idx].astype(np.int32)[lc0],
+                ])
+                half = eids0.shape[0]
+                if slot_cnt is None:
+                    # Small table: two straight bincounts beat the buffered
+                    # fancy-index adds and need no zeroing afterwards.
+                    t_cnt = np.bincount(key, minlength=vstate.phi.size)
+                    o_cnt = np.bincount(key[:half],
+                                        minlength=vstate.phi.size)
+                else:
+                    ones = np.ones(key.shape[0], dtype=np.int32)
+                    np.add.at(slot_cnt, key, ones)
+                    np.add.at(slot_out, key[:half], ones[:half])
+                    t_cnt, o_cnt = slot_cnt, slot_out
+                ps = vstate.phi.reshape(-1)[key]
+                cm = (t_cnt[key] > 1) & ((ps < 2) | (ps - o_cnt[key] < 2))
+                if t_cnt is slot_cnt:  # zero only what this call touched
+                    slot_cnt[key] = 0
+                    slot_out[key] = 0
+                used_buf, rank_buf, persistent = slot_done, slot_rank, True
+            else:
+                skey = np.concatenate([
+                    eids0 * k + part[cand_idx][lc0],       # leaving slots
+                    eids0 * k + target_full[cand_idx][lc0],  # entering
+                ])
+                # No phi table (level too big to densify): compress the
+                # slot keys first, then use call-local buffers.
+                slots = np.unique(skey)
+                key = np.searchsorted(slots, skey)
+                t_cnt = np.bincount(key, minlength=slots.shape[0])
+                o_cnt = np.bincount(key[:eids0.shape[0]],
+                                    minlength=slots.shape[0])
+                phi_slot = _slot_phi(slots)
+                cm = ((t_cnt[key] > 1)
+                      & ((phi_slot[key] < 2)
+                         | (phi_slot[key] - o_cnt[key] < 2)))
+                used_buf = np.zeros(slots.shape[0], dtype=bool)
+                rank_buf = np.zeros(slots.shape[0], dtype=np.int32)
+                persistent = False
+            # Fat-round payoff: a candidate touching no contended slot
+            # conflicts with nobody and wins outright; only contended
+            # candidates enter the priority rounds.
+            rmask = np.bincount(lc2[cm], minlength=nc) > 0
+            free = cand_idx[~rmask]
+            if free.shape[0]:
+                chosen.append(free)
+            # Dense (gain, -id) ranks as priorities, computed once per
+            # call: rank comparisons are order-isomorphic to the pairwise
+            # tie-breaking, and stay valid on every remaining-subset.
+            pri = np.empty(nc, dtype=np.int32)
+            pri[np.lexsort((cand_idx, -g_sel[cand_idx]))] = np.arange(
+                nc, 0, -1, dtype=np.int32)
+            ckey, clc = key[cm], lc2[cm]  # contended pairs only
+            for _ in range(_LUBY_ROUNDS):
+                if not rmask.any():
+                    break
+                ap = rmask[clc]  # this round's live contended pairs
+                akey, alc = ckey[ap], clc[ap]
+                excl = np.bincount(alc[used_buf[akey]], minlength=nc) > 0
+                rank_buf[akey] = 0
+                np.maximum.at(rank_buf, akey, pri[alc])
+                lost = np.bincount(alc[rank_buf[akey] > pri[alc]],
+                                   minlength=nc) > 0
+                win = rmask & ~excl & ~lost
+                winners = cand_idx[win]
+                if winners.shape[0]:
+                    chosen.append(winners)
+                    used_buf[akey[win[alc]]] = True
+                rmask &= ~excl & lost
+            if persistent:  # zero only what this call touched
+                used_buf[ckey] = False
+                rank_buf[ckey] = 0
+            if not chosen:
+                return np.empty(0, dtype=np.int64)
+            return np.concatenate(chosen)
+        # 0 = not a candidate, 1 = still in the running, 2 = chosen.
+        status = np.zeros(n, dtype=np.int8)
+        status[cand_idx] = 1
         for _ in range(_LUBY_ROUNDS):
             if remaining.shape[0] == 0:
                 break
@@ -428,39 +714,20 @@ def refine_level_vec(
             # Segment-any over the (pair -> candidate) map as bincounts of
             # the offending pair subset (buffered C loops; the equivalent
             # ``np.logical_or.at`` is unbuffered and ~10x slower here).
-            if objective == "cut":
-                eidx, local = _row_edges(graph, remaining)
-                u, v = remaining[local], nbr[eidx]
-                excl = np.bincount(local[status[v] == 2], minlength=nr) > 0
-                beat = (status[v] == 1) & (
-                    (g_sel[v] > g_sel[u])
-                    | ((g_sel[v] == g_sel[u]) & (v < u))
-                )
-                lost = np.bincount(local[beat], minlength=nr) > 0
-            else:
-                # Dense (gain, -id) ranks as priorities: distinct ints that
-                # induce exactly the pairwise tie-breaking above, with no
-                # packing overflow to guard.
-                pri = np.empty(nr, dtype=np.int64)
-                pri[np.lexsort((remaining, -g_sel[remaining]))] = np.arange(
-                    nr, 0, -1)
-                eidx, local = _csr_gather(vxadj, remaining)
-                eids = vedges[eidx]
-                excl = np.bincount(local[edge_used[eids]], minlength=nr) > 0
-                edge_max = np.full(hyper.num_hyperedges, 0, dtype=np.int64)
-                np.maximum.at(edge_max, eids, pri[local])
-                lost = np.bincount(local[edge_max[eids] > pri[local]],
-                                   minlength=nr) > 0
+            eidx, local = _row_edges(graph, remaining)
+            u, v = remaining[local], nbr[eidx]
+            excl = np.bincount(local[status[v] == 2], minlength=nr) > 0
+            beat = (status[v] == 1) & (
+                (g_sel[v] > g_sel[u])
+                | ((g_sel[v] == g_sel[u]) & (v < u))
+            )
+            lost = np.bincount(local[beat], minlength=nr) > 0
             win = ~excl & ~lost
             winners = remaining[win]
-            if objective == "cut":
-                status[remaining[excl]] = 0  # out of the running for good
+            status[remaining[excl]] = 0  # out of the running for good
             if winners.shape[0]:
                 chosen.append(winners)
-                if objective == "cut":
-                    status[winners] = 2
-                else:
-                    edge_used[eids[win[local]]] = True
+                status[winners] = 2
             remaining = remaining[~excl & lost]
         if not chosen:
             return np.empty(0, dtype=np.int64)
@@ -518,8 +785,32 @@ def refine_level_vec(
     credit_base = cut
     cooled_until = np.full(n, -1, dtype=np.int64)
 
-    use_deg_cache = n * k <= _DEG_CACHE_ENTRIES
-    deg_cache = np.zeros((n, k)) if use_deg_cache else None
+    if sview is None:
+        use_deg_cache = n * k <= _DEG_CACHE_ENTRIES
+        deg_cache = np.zeros((n, k)) if use_deg_cache else None
+    else:
+        # Per-device memory model: each block's rows cache with their
+        # shard, so the gate is the largest block — a graph whose global
+        # (n, k) matrix is too big can still cache when split s ways.
+        max_block = int(np.diff(np.asarray(plan.bounds)).max())
+        use_deg_cache = max_block * k <= _DEG_CACHE_ENTRIES
+        deg_cache = _ShardedRowCache(plan.bounds, k) if use_deg_cache else None
+
+    def cache_rows(rows: np.ndarray) -> np.ndarray:
+        return deg_cache[rows] if sview is None else deg_cache.get(rows)
+
+    def cache_store(rows: np.ndarray, deg: np.ndarray) -> None:
+        if sview is None:
+            deg_cache[rows] = deg
+        else:
+            deg_cache.set(rows, deg)
+
+    def cache_scatter(rows: np.ndarray, cols: np.ndarray,
+                      vals: np.ndarray) -> None:
+        if sview is None:
+            np.add.at(deg_cache, (rows, cols), vals)
+        else:
+            deg_cache.add_at(rows, cols, vals)
     # Rows whose deg_cache entry is current.  Volume rows with the row
     # cache are maintained *incrementally* (see delta_update): a move
     # changes a co-member's D* row in exactly two columns, so the batch
@@ -565,8 +856,8 @@ def refine_level_vec(
         hit_d = phi_d[j] == (cd[j] == pu) + 1
         ks = known[mem] & hit_s
         kd = known[mem] & hit_d
-        np.add.at(deg_cache, (mem[ks], cs[j][ks]), -w[j][ks])
-        np.add.at(deg_cache, (mem[kd], cd[j][kd]), w[j][kd])
+        cache_scatter(mem[ks], cs[j][ks], -w[j][ks])
+        cache_scatter(mem[kd], cd[j][kd], w[j][kd])
         # Only rows that actually changed re-enter the active set; a member
         # whose both indicator thresholds were missed has a byte-identical
         # row and an exact cached gain (feasibility staleness is caught by
@@ -578,17 +869,30 @@ def refine_level_vec(
         degree rows: best *feasible* foreign column under the current
         partition weights (the scalar FM queue's walk down the degree
         vector to the first partition with room, as one masked argmax).
-        Cumulative capacity is still enforced exactly at admission."""
+        Cumulative capacity is still enforced exactly at admission.
+
+        ``deg`` is always a fresh per-call matrix (an eval result or a
+        row-cache gather, both already stored/copied), so the feasibility
+        masking mutates it in place instead of allocating a second
+        (rows, k) array via ``np.where``; uniform-weight row sets — every
+        finest level — reduce it to masking the handful of *full columns*.
+        """
         own = part[rows_v]
         rows = np.arange(rows_v.shape[0])
         internal = deg[rows, own]  # advanced indexing: already a copy
-        m = np.where(pweight[None, :] + vwgt[rows_v][:, None] <= cap[None, :],
-                     deg, -np.inf)
-        m[rows, own] = -np.inf
-        t = np.argmax(m, axis=1)
+        w = vwgt[rows_v]
+        head = cap - pweight
+        if w.shape[0] and w[0] == w[-1] and (w == w[0]).all():
+            bad = head < w[0]
+            if bad.any():
+                deg[:, bad] = -np.inf
+        else:
+            deg[w[:, None] > head[None, :]] = -np.inf
+        deg[rows, own] = -np.inf
+        t = np.argmax(deg, axis=1)
         target_full[rows_v] = t
         internal_full[rows_v] = internal
-        gain_full[rows_v] = m[rows, t] - internal
+        gain_full[rows_v] = deg[rows, t] - internal
 
     for it in range(max_iters):
         # Evaluate rows whose cached degree row is missing or invalid, in
@@ -599,24 +903,23 @@ def refine_level_vec(
             need, cached_rows = active[~ka], active[ka]
         else:
             need, cached_rows = active, None
-        for lo in range(0, need.shape[0], chunk):
-            rows_v = need[lo:lo + chunk]
-            deg = eval_rows(rows_v)
+        for rows_v, pvec in eval_chunks(need):
+            deg = eval_rows(rows_v, pvec)
             if deg_cache is not None:
-                deg_cache[rows_v] = deg
+                cache_store(rows_v, deg)
                 known[rows_v] = True
             choose_targets(rows_v, deg)
         if cached_rows is not None and cached_rows.shape[0]:
-            choose_targets(cached_rows, deg_cache[cached_rows])
+            choose_targets(cached_rows, cache_rows(cached_rows))
         # A cached target goes stale when its partition fills up.  Degree
         # rows themselves only change when a co-member moves, so with the
         # row cache retargeting is a pure masked argmax — no re-gather;
         # without it the rows re-enter the active set for re-evaluation.
-        stale = np.isfinite(gain_full) & (pweight[target_full] + vwgt > cap[target_full])
+        stale = np.isfinite(gain_full) & (vwgt > (cap - pweight)[target_full])
         srows = np.nonzero(stale)[0]
         if srows.shape[0]:
             if use_deg_cache:
-                choose_targets(srows, deg_cache[srows])
+                choose_targets(srows, cache_rows(srows))
                 srows = np.empty(0, dtype=np.int64)
             else:
                 gain_full[srows] = -np.inf
@@ -719,7 +1022,7 @@ def refine_level_vec(
 
 
 def uncoarsen_vec(
-    levels: list[Graph],
+    levels,
     coarse_part: np.ndarray,
     k: int,
     capacity: int,
@@ -729,6 +1032,7 @@ def uncoarsen_vec(
     scalar_max_k: int = _SCALAR_MAX_K,
     objective: str = "cut",
     plateau_rounds: int | None = None,
+    shards=None,
 ) -> tuple[np.ndarray, int]:
     """Walk levels coarse->fine, refining each level with whichever engine
     its shape favors: the scalar FM queue for small few-partition *cut*
@@ -737,20 +1041,32 @@ def uncoarsen_vec(
     incremental Φ table and the plateau walk it matches the scalar queue's
     quality at a fraction of the time (the λ-gain queue's per-move cost is
     worst exactly where delegation used to send it).  ``max_nonimproving``
-    applies to the scalar-delegated levels; ``plateau_rounds`` threads
-    through to ``refine_level_vec``."""
+    applies to the scalar-delegated levels; ``plateau_rounds`` and
+    ``shards`` thread through to ``refine_level_vec`` (a shard *count* is
+    re-planned per level, since each level has its own vertex count).
+
+    ``levels`` is any integer-indexable sequence of Graphs — a plain list
+    or ``coarsen.LevelStore``; levels are accessed one index at a time,
+    finest last, so an out-of-core store only ever holds two levels
+    resident.
+    """
 
     def refine(g: Graph, p: np.ndarray) -> tuple[np.ndarray, int]:
         if (objective == "cut" and k <= scalar_max_k
                 and g.num_vertices * k <= scalar_nk):
             return refine_level(g, p, k, capacity, max_nonimproving,
                                 objective=objective)
+        level_shards = shards
+        if shards is not None and not hasattr(shards, "bounds"):
+            level_shards = _as_vertex_plan(g.num_vertices, shards)
         return refine_level_vec(g, p, k, capacity, use_kernel=use_kernel,
                                 objective=objective,
-                                plateau_rounds=plateau_rounds)
+                                plateau_rounds=plateau_rounds,
+                                shards=level_shards)
 
-    part, cut = refine(levels[-1], coarse_part)
-    for fine, coarse in zip(reversed(levels[:-1]), reversed(levels[1:])):
-        part = project(part, coarse.cmap)
-        part, cut = refine(fine, part)
+    nlev = len(levels)
+    part, cut = refine(levels[nlev - 1], coarse_part)
+    for i in range(nlev - 2, -1, -1):
+        part = project(part, levels[i + 1].cmap)
+        part, cut = refine(levels[i], part)
     return part, cut

@@ -28,7 +28,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingPlan", "plan_params", "plan_caches", "plan_batch",
-           "plan_opt_state", "spec_for_param"]
+           "plan_opt_state", "spec_for_param",
+           "VertexShardPlan", "plan_vertex_shards"]
 
 
 # (name, neg_dim) -> shard over model axis.  None neg_dim = replicate.
@@ -289,6 +290,95 @@ def plan_batch(plan: ShardingPlan, batch: Any) -> Any:
             f"batch {'/'.join(_path_names(path))}: {leaf.shape} !% {div} -> replicated")
         return P(*([None] * leaf.ndim))
     return jax.tree_util.tree_map_with_path(one, batch)
+
+
+# ------------------------------------------------- vertex-block sharding
+#
+# The partitioning engine shards its O(n)/O(m) state over contiguous vertex
+# blocks (CSR rows stay contiguous per shard, so per-shard adjacency slices
+# are zero-copy views).  Same planner philosophy as the param rules above:
+# uneven or device-incompatible layouts degrade gracefully and the drop is
+# recorded in `notes` instead of failing.
+
+
+@dataclass
+class VertexShardPlan:
+    """Contiguous vertex-block decomposition of an n-vertex graph.
+
+    ``bounds`` is an int64 array of length ``num_shards + 1`` with
+    ``bounds[0] == 0`` and ``bounds[-1] == n``; shard ``s`` owns the
+    half-open vertex range ``[bounds[s], bounds[s+1])``.  When the plan was
+    built with device placement and the blocks divide evenly, ``sharding``
+    holds a :class:`jax.sharding.NamedSharding` over a 1-D ``vertex`` mesh
+    axis for placing O(n) vertex arrays; otherwise it is ``None`` and the
+    reason is in ``notes`` (single host keeps plain numpy blocks).
+    """
+
+    bounds: np.ndarray
+    sharding: Any = None
+    notes: list[str] = field(default_factory=list)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.bounds) - 1
+
+    @property
+    def n(self) -> int:
+        return int(self.bounds[-1])
+
+    def block(self, s: int) -> tuple[int, int]:
+        return int(self.bounds[s]), int(self.bounds[s + 1])
+
+    def owner(self, vertices: np.ndarray) -> np.ndarray:
+        """Shard id owning each vertex id."""
+        return np.searchsorted(self.bounds, vertices, side="right") - 1
+
+    def split(self, rows: np.ndarray) -> list[np.ndarray]:
+        """Split a sorted array of vertex ids into per-shard sub-arrays."""
+        cuts = np.searchsorted(rows, self.bounds[1:-1])
+        return np.split(rows, cuts)
+
+    def device_put(self, arr: np.ndarray):
+        """Place an O(n) vertex array according to the plan.
+
+        Returns a device-sharded jax array when the plan carries a
+        NamedSharding, else the input unchanged (single-host numpy path).
+        """
+        if self.sharding is None:
+            return arr
+        return jax.device_put(arr, self.sharding)
+
+
+def plan_vertex_shards(n: int, num_shards: int,
+                       use_devices: bool | str = "auto") -> VertexShardPlan:
+    """Plan ``num_shards`` contiguous near-equal vertex blocks for n vertices.
+
+    ``use_devices="auto"`` attaches a :class:`jax.sharding.NamedSharding`
+    over a 1-D ``vertex`` mesh when the host has at least ``num_shards``
+    devices *and* n divides evenly (jax requires equal shards along a mesh
+    axis); otherwise the plan stays host-only and records why.  Tests can
+    force multiple CPU devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    num_shards = min(num_shards, max(1, n))
+    bounds = (np.arange(num_shards + 1, dtype=np.int64) * n) // num_shards
+    plan = VertexShardPlan(bounds=bounds)
+    if use_devices is False:
+        return plan
+    devices = jax.devices()
+    if len(devices) < num_shards:
+        plan.notes.append(
+            f"{len(devices)} device(s) < {num_shards} shards -> host-only blocks")
+        return plan
+    if n % num_shards != 0:
+        plan.notes.append(
+            f"n={n} !% {num_shards} shards -> host-only blocks (jax needs even)")
+        return plan
+    mesh = Mesh(np.asarray(devices[:num_shards]), ("vertex",))
+    plan.sharding = NamedSharding(mesh, P("vertex"))
+    return plan
 
 
 # ----------------------------------------------------------- optimizer
